@@ -1,0 +1,58 @@
+"""Paper Fig. 3: ResNet-18 on the Zynq-7000 cluster, 4 strategies x N=1..12.
+
+Prints the simulated table next to the paper's published one with
+per-cell error; the summary row is the MAPE per strategy column.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.cost_model import ZYNQ7020
+from repro.core.graph import resnet18_graph
+from repro.core.simulator import simulate
+from repro.core.strategies import STRATEGIES, make_plan
+
+from benchmarks.paper_data import ZYNQ_TABLE
+
+
+def run(board=ZYNQ7020, table=ZYNQ_TABLE, max_nodes=12, label="fig3_zynq"):
+    g = resnet18_graph()
+    rows = []
+    print(f"\n== {label}: simulated vs paper (ms/image) ==")
+    print(f"{'N':>3} | " + " | ".join(f"{s[:14]:>24}" for s in STRATEGIES))
+    mape = {s: [] for s in STRATEGIES}
+    t0 = time.perf_counter()
+    for n in range(1, max_nodes + 1):
+        cells = []
+        for s in STRATEGIES:
+            got = simulate(g, make_plan(g, s, n), board).avg_ms_per_image
+            want = table[s][n - 1]
+            err = abs(got - want) / want
+            mape[s].append(err)
+            cells.append(f"{got:7.2f} vs {want:6.2f} ({100*err:4.0f}%)")
+        print(f"{n:>3} | " + " | ".join(cells))
+        rows.append(cells)
+    elapsed = time.perf_counter() - t0
+    print("MAPE | " + " | ".join(
+        f"{100*sum(mape[s])/len(mape[s]):23.1f}%" for s in STRATEGIES
+    ))
+    overall = sum(sum(v) for v in mape.values()) / sum(len(v) for v in mape.values())
+    n_cells = sum(len(v) for v in mape.values())
+    return {
+        "name": label,
+        "us_per_call": 1e6 * elapsed / (max_nodes * len(STRATEGIES)),
+        "derived": f"mape={overall:.3f}",
+        "mape": overall,
+        "per_strategy_mape": {s: sum(v) / len(v) for s, v in mape.items()},
+    }
+
+
+def main():
+    r = run()
+    print(f"\nname,us_per_call,derived")
+    print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

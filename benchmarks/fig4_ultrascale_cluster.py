@@ -1,0 +1,17 @@
+"""Paper Fig. 4: ResNet-18 on the UltraScale+ cluster, 4 strategies x N=1..5."""
+
+from repro.core.cost_model import ULTRASCALE
+
+from benchmarks.fig3_zynq_cluster import run
+from benchmarks.paper_data import ULTRASCALE_TABLE
+
+
+def main():
+    r = run(board=ULTRASCALE, table=ULTRASCALE_TABLE, max_nodes=5,
+            label="fig4_ultrascale")
+    print(f"\nname,us_per_call,derived")
+    print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""VTA kernel microbenchmarks (Table I configurations).
+
+Interpret-mode timings measure Python-level kernel-body execution (CPU),
+NOT TPU performance — the derived column therefore reports the
+*structural* quantities that transfer: VMEM working set per grid step
+and arithmetic intensity, which determine MXU feasibility on real
+hardware.  Wall-clock numbers are for regression tracking only.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.vta_gemm import vmem_footprint_bytes
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()  # compile+warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    results = []
+    for preset, blocks in ops.BLOCK_PRESETS.items():
+        m = k = n = 512
+        a = jax.random.randint(k1, (m, k), -128, 128, jnp.int8)
+        w = jax.random.randint(k2, (k, n), -128, 128, jnp.int8)
+        dt = _time(lambda a, w: ops.matmul_int8(a, w, preset=preset, interpret=True), a, w)
+        vmem = vmem_footprint_bytes(**blocks)
+        macs = m * k * n
+        intensity = macs / (m * k + k * n + m * n * 4)  # MACs per byte
+        print(f"vta_gemm[{preset}] {m}x{k}x{n}: {dt*1e3:.1f} ms/call "
+              f"(interpret), VMEM/step {vmem/2**20:.2f} MiB, "
+              f"intensity {intensity:.0f} MAC/B")
+        results.append((f"kernel_gemm_{preset}", dt * 1e6,
+                        f"vmem_mib={vmem/2**20:.2f};intensity={intensity:.0f}"))
+    x = jax.random.randint(k1, (512, 256), -(2**20), 2**20, jnp.int32)
+    y = jax.random.randint(k2, (512, 256), -(2**20), 2**20, jnp.int32)
+    dt = _time(lambda x, y: ops.alu(x, y, op="add", interpret=True), x, y)
+    print(f"vta_alu[add] 512x256: {dt*1e3:.1f} ms/call (interpret)")
+    results.append(("kernel_alu_add", dt * 1e6, "elementwise"))
+    print("\nname,us_per_call,derived")
+    for name, us, der in results:
+        print(f"{name},{us:.1f},{der}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""The paper's published numbers (Fig. 3a, Fig. 4a, and §IV anchors).
+
+All values are milliseconds per image, ResNet-18, (N,224,224,3), averaged
+over 10 x 10,000 ImageNet test images — as reported.
+"""
+
+# Fig. 3(a): Zynq-7000 stack, N = 1..12
+ZYNQ_TABLE = {
+    "scatter_gather": [27.34, 17.53, 12.33, 7.87, 6.44, 5.66, 4.78, 3.94, 3.17, 2.84, 2.71, 2.58],
+    "ai_core_assignment": [27.34, 36.85, 28.32, 20.31, 15.40, 9.63, 4.55, 3.98, 2.46, 2.11, 1.93, 1.84],
+    "pipeline": [27.34, 20.43, 15.59, 11.29, 9.03, 7.33, 5.93, 4.22, 3.88, 3.22, 2.94, 2.62],
+    "fused": [27.34, 19.32, 16.87, 9.13, 7.37, 6.62, 4.92, 4.01, 3.45, 2.94, 2.74, 2.66],
+}
+
+# Fig. 4(a): UltraScale+ stack, N = 1..5
+ULTRASCALE_TABLE = {
+    "scatter_gather": [25.15, 16.73, 11.78, 7.42, 6.01],
+    "ai_core_assignment": [25.15, 33.96, 26.24, 18.70, 14.14],
+    "pipeline": [25.15, 19.03, 14.57, 10.88, 8.58],
+    "fused": [25.15, 18.28, 16.04, 8.63, 6.93],
+}
+
+# §IV reconfiguration anchors (single UltraScale+ node):
+#  - 350 MHz clock: ~5.7% faster than the 300 MHz Fig. 4 baseline
+#  - BLOCK=32, doubled buffers, 200 MHz: ~43.86% faster
+US_350MHZ_MS = 25.15 * (1.0 - 0.057)
+US_BIGCFG_MS = 25.15 * (1.0 - 0.4386)

@@ -1,0 +1,218 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+Terms are derived ANALYTICALLY from the architecture configs and the
+hardware constants, because ``cost_analysis()`` on the compiled module
+counts each ``lax.scan`` body exactly ONCE (verified: a 10-step scanned
+matmul reports 1 matmul of FLOPs) — and every layer stack, microbatch
+loop, and flash-attention tile loop in this codebase is a scan, so the
+HLO numbers systematically undercount totals.  The dry-run's compiled
+artifacts still back the analysis: per-device memory_analysis() proves
+residency, and the partitioned HLO's collective OPS (kinds + shard
+shapes) prove which collectives the schedule contains; EXPERIMENTS.md
+§Dry-run records both.
+
+Per (arch x shape) on the single-pod mesh (256 chips):
+
+  t_compute = FLOPs_total / (chips * 197e12)
+  t_memory  = HBM_bytes_per_chip / 819e9
+  t_coll    = ICI_bytes_per_chip / 50e9
+
+FLOPs_total:
+  train  : 8*Na*D   (6ND backprop + 2ND remat forward recompute)
+           + attention term (flash computes full S^2 tiles; bwd ~2x)
+  prefill: 2*Na*D + attention term
+  decode : 2*Na*B + 4*B*T*H*hd (KV reads scoring the full cache)
+
+HBM bytes/chip (fused = ZeRO-3(data) x TP(model) sharding):
+  train  : microbatched weight passes (3 per microbatch: fwd, bwd,
+           opt r/w) on the chip's model-axis shard + optimizer state r/w
+           + remat stash write+read
+  prefill: weight shard read per chunk + KV-cache write
+  decode : weight shard read per step + KV-cache read
+ICI bytes/chip:
+  train  : ZeRO weight all-gather per microbatch (fwd+bwd) + gradient
+           reduce-scatter/all-gather over the data axis + TP activation
+           all-reduces
+  prefill/decode: ZeRO weight all-gather per step (THE serving
+           bottleneck this repo's §Perf iteration removes by switching
+           serving to TP-only sharding) + TP activation psums
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.core.cost_model import TPU_V5E, lm_param_count
+from repro.launch.specs import TRAIN_GRAD_ACCUM
+
+CHIPS = 256
+MODEL_AXIS = 16
+DATA_AXIS = 16
+
+
+def _counts(cfg):
+    total, active = lm_param_count(
+        num_layers=cfg.num_layers + cfg.encoder_layers,
+        d_model=cfg.d_model,
+        num_heads=max(cfg.num_heads, 1),
+        kv_heads=max(cfg.kv_heads, 1),
+        d_ff=cfg.d_ff,
+        vocab=cfg.vocab,
+        moe_experts=cfg.moe_experts,
+        moe_top_k=cfg.moe_top_k,
+        moe_shared=cfg.moe_shared_experts,
+        ssm_state=cfg.ssm_state,
+        attn_free=cfg.is_attention_free,
+    )
+    return total, active
+
+
+def _attn_dims(cfg):
+    if cfg.is_attention_free:
+        return 0, 0
+    if cfg.uses_mla:
+        return cfg.num_heads, cfg.mla_head_dim + cfg.rope_head_dim
+    return cfg.num_heads, cfg.head_dim
+
+
+def _kv_bytes(cfg, batch, seqlen):
+    """KV/state cache bytes (bf16) for the whole model."""
+    L = cfg.num_layers
+    if cfg.is_attention_free:
+        d_inner = cfg.ssm_expand * cfg.d_model
+        h = d_inner // cfg.ssm_head_dim
+        return L * batch * (h * cfg.ssm_state * cfg.ssm_head_dim * 4)
+    if cfg.uses_mla:
+        return L * batch * seqlen * (cfg.kv_lora_rank + cfg.rope_head_dim) * 2
+    win = cfg.sliding_window or seqlen
+    t = min(seqlen, win) if cfg.sliding_window else seqlen
+    kv = L * batch * t * 2 * cfg.kv_heads * cfg.head_dim * 2
+    if cfg.attn_every:  # hybrid: few attn layers + ssm states
+        groups = cfg.num_layers // cfg.attn_every
+        kv = groups * batch * seqlen * 2 * cfg.kv_heads * cfg.head_dim * 2
+        d_inner = cfg.ssm_expand * cfg.d_model
+        kv += cfg.num_layers * batch * (d_inner // cfg.ssm_head_dim) * cfg.ssm_state * cfg.ssm_head_dim * 4
+    return kv
+
+
+def cell_terms(arch: str, shape_name: str, hw=TPU_V5E, serving_tp_only=False):
+    cfg = get_config(arch)
+    if shape_name in cfg.skip_shapes:
+        return None
+    shape = SHAPES[shape_name]
+    n_total, n_active = _counts(cfg)
+    p_bytes = 2.0 * n_total
+    h, hd = _attn_dims(cfg)
+    L_attn = (cfg.num_layers // cfg.attn_every) if cfg.attn_every else (
+        0 if cfg.is_attention_free else cfg.num_layers + cfg.encoder_layers
+    )
+    gb, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        ga = TRAIN_GRAD_ACCUM.get(arch, 1)
+        d_tokens = gb * s
+        s_eff = min(s, cfg.sliding_window) if cfg.sliding_window else s
+        attn_fl = 12.0 * gb * s * s_eff * h * hd * L_attn  # fwd4+bwd8, full tiles
+        flops = 8.0 * n_active * d_tokens + attn_fl
+        stash = (cfg.num_layers + cfg.encoder_layers) * d_tokens * cfg.d_model * 2 / ga
+        moments = 2 if arch in ("deepseek_v2_236b", "mixtral_8x22b",
+                                "internvl2_76b", "qwen2_72b", "yi_34b") else 4
+        # per-chip HBM traffic: each microbatch streams the chip's
+        # model-axis weight shard 3x (fwd, bwd, opt pass amortized), the
+        # optimizer state + grads r/w land on the chip's 1/256 shard, and
+        # the remat stash is written+read once per step
+        hbm = (
+            3.0 * ga * (p_bytes / MODEL_AXIS)
+            + (4 * moments * n_total + 3 * p_bytes) / CHIPS
+            + 2.0 * stash / DATA_AXIS
+        )
+        ici = (
+            2.0 * ga * p_bytes / MODEL_AXIS * (DATA_AXIS - 1) / DATA_AXIS  # ZeRO AG fwd+bwd
+            + 2.0 * p_bytes / MODEL_AXIS                                    # grad RS+AG
+            + 2.0 * L_attn * (d_tokens / DATA_AXIS) * cfg.d_model * 2 * (MODEL_AXIS - 1) / MODEL_AXIS  # TP psums
+        )
+    elif shape.kind == "prefill":
+        d_tokens = gb * s
+        s_eff = min(s, cfg.sliding_window) if cfg.sliding_window else s
+        attn_fl = 4.0 * gb * s * s_eff * h * hd * L_attn
+        flops = 2.0 * n_active * d_tokens + attn_fl
+        chunks = max(1, s // 4096)
+        kvb = _kv_bytes(cfg, gb, s)
+        hbm = chunks * p_bytes / MODEL_AXIS + kvb / CHIPS
+        ici = (0.0 if serving_tp_only else chunks * p_bytes / MODEL_AXIS * (DATA_AXIS - 1) / DATA_AXIS) \
+            + 2.0 * L_attn * (d_tokens / DATA_AXIS) * cfg.d_model * 2 * (MODEL_AXIS - 1) / MODEL_AXIS
+    else:  # decode
+        d_tokens = gb
+        kvb = _kv_bytes(cfg, gb, s)
+        flops = 2.0 * n_active * gb + 4.0 * gb * min(
+            s, cfg.sliding_window or s
+        ) * max(cfg.kv_heads, 1) * (hd or 1) * L_attn
+        hbm = p_bytes / MODEL_AXIS + kvb / CHIPS
+        ici = (0.0 if serving_tp_only else p_bytes / MODEL_AXIS * (DATA_AXIS - 1) / DATA_AXIS) \
+            + 2.0 * (cfg.num_layers + cfg.encoder_layers) * (gb / DATA_AXIS) * cfg.d_model * 2 * (MODEL_AXIS - 1) / MODEL_AXIS
+
+    t_comp = flops / (CHIPS * hw.peak_flops_bf16)
+    t_mem = hbm / hw.hbm_bytes_per_s
+    t_coll = ici / hw.ici_link_bytes_per_s
+    dom = max([("compute", t_comp), ("memory", t_mem), ("collective", t_coll)],
+              key=lambda kv: kv[1])[0]
+    bound = max(t_comp, t_mem, t_coll)
+    model_fl = (6.0 if shape.kind == "train" else 2.0) * n_active * d_tokens
+    frac = (model_fl / (CHIPS * hw.peak_flops_bf16)) / bound if bound else 0.0
+    return {
+        "arch": arch, "shape": shape_name,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom, "roofline_fraction": frac,
+        "model_flops": model_fl,
+    }
+
+
+def hlo_evidence(path="dryrun_results.jsonl", mesh="16x16"):
+    """Compile-backed facts per cell: per-device memory + collective mix."""
+    if not os.path.exists(path):
+        return {}
+    out = {}
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("status") == "ok" and r.get("mesh") == mesh:
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def main():
+    ev = hlo_evidence()
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            t = cell_terms(arch, shape)
+            if t is None:
+                continue
+            e = ev.get((arch, shape))
+            if e:
+                t["hbm_gib_per_dev"] = (e["arg_bytes"] + e["temp_bytes"]) / 2**30
+                t["hlo_coll_mib"] = e["collective_bytes"]["total"] / 2**20
+            rows.append(t)
+    print(f"{'arch':<24}{'shape':<13}{'compute':>9}{'memory':>9}"
+          f"{'coll':>9}{'dominant':>11}{'roofline%':>10}{'HBM GiB':>9}")
+    worst = None
+    for r in rows:
+        print(f"{r['arch']:<24}{r['shape']:<13}"
+              f"{r['t_compute_s']*1e3:8.1f}m{r['t_memory_s']*1e3:8.1f}m"
+              f"{r['t_collective_s']*1e3:8.1f}m{r['dominant']:>11}"
+              f"{100*r['roofline_fraction']:9.1f}%"
+              f"{r.get('hbm_gib_per_dev', float('nan')):9.1f}")
+        if worst is None or r["roofline_fraction"] < worst["roofline_fraction"]:
+            worst = r
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print("\nname,us_per_call,derived")
+    print(f"roofline,0,cells={len(rows)};dominants={doms};"
+          f"worst={worst['arch']}x{worst['shape']}@{100*worst['roofline_fraction']:.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

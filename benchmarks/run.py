@@ -1,0 +1,77 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``  prints a CSV summary
+(``name,us_per_call,derived``) after each module's detailed output.
+"""
+
+from __future__ import annotations
+
+import io
+import sys
+import traceback
+
+
+def _capture(mod_main):
+    buf = io.StringIO()
+    old = sys.stdout
+    sys.stdout = buf
+    try:
+        mod_main()
+    finally:
+        sys.stdout = old
+    text = buf.getvalue()
+    print(text)
+    # extract the CSV tail rows
+    rows = []
+    lines = text.splitlines()
+    for i, ln in enumerate(lines):
+        if ln.strip() == "name,us_per_call,derived":
+            rows = [l for l in lines[i + 1 :] if l.strip()]
+            break
+    return rows
+
+
+def main() -> None:
+    from benchmarks import (
+        discussion_reconfig,
+        fig3_zynq_cluster,
+        fig4_ultrascale_cluster,
+        kernel_bench,
+        power,
+        strategy_tpu,
+    )
+
+    csv_rows: list[str] = []
+    modules = [
+        ("fig3_zynq_cluster", fig3_zynq_cluster.main),
+        ("fig4_ultrascale_cluster", fig4_ultrascale_cluster.main),
+        ("discussion_reconfig", discussion_reconfig.main),
+        ("kernel_bench", kernel_bench.main),
+        ("strategy_tpu", strategy_tpu.main),
+        ("power", power.main),
+    ]
+    # roofline only runs when a dry-run results file exists
+    import os
+    if os.path.exists("dryrun_results.jsonl"):
+        from benchmarks import roofline
+        modules.append(("roofline", roofline.main))
+
+    failed = []
+    for name, fn in modules:
+        print(f"\n{'='*72}\n== benchmarks.{name}\n{'='*72}")
+        try:
+            csv_rows += _capture(fn)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+
+    print(f"\n{'='*72}\n== SUMMARY (name,us_per_call,derived)\n{'='*72}")
+    for row in csv_rows:
+        print(row)
+    if failed:
+        print(f"\nFAILED modules: {failed}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Beyond-paper: the four cluster strategies applied to the assigned LM
+architectures on the TPU cost model.
+
+The FPGA simulator reproduced the paper at 12 nodes / 1 GbE; here the
+same ClusterPlans are costed against the TPU pod model (197 TFLOP/s,
+819 GB/s HBM, 50 GB/s ICI) across pod sizes, answering the question the
+paper poses for 'large-scale distributed systems' (§V): WHICH schedule
+wins at which scale for which architecture family.
+
+Coarse analytic model per strategy (per accelerator, per batch-unit):
+  scatter_gather : compute/N             + output gather
+  ai_core        : compute/N             + per-layer activation reshard
+                   (TP: 2 all-reduces of activations per layer)
+  pipeline       : compute/N (pipelined) + boundary activations / ICI,
+                   bubble (S-1)/(M+S-1)
+  fused          : pipeline stages x in-stage TP with cost-balanced
+                   widths
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.core.cost_model import TPU_V5E
+from repro.core.graph import transformer_graph
+
+
+def arch_graph(arch: str, seq_len: int = 4096):
+    cfg = get_config(arch)
+    return transformer_graph(
+        cfg.name,
+        num_layers=cfg.num_layers + cfg.encoder_layers,
+        d_model=cfg.d_model,
+        num_heads=max(cfg.num_heads, 1),
+        kv_heads=max(cfg.kv_heads, 1),
+        d_ff=cfg.d_ff,
+        vocab=cfg.vocab,
+        seq_len=seq_len,
+        moe_experts=cfg.moe_experts,
+        moe_top_k=cfg.moe_top_k,
+        moe_shared=cfg.moe_shared_experts,
+        ssm_state=cfg.ssm_state,
+        attn_free=cfg.is_attention_free,
+    )
+
+
+def strategy_time(g, strategy: str, n: int, hw=TPU_V5E, microbatches: int = 8):
+    flops = g.total_flops
+    act = g.total_activation_bytes
+    layers = max(len(g.ops) - 2, 1)
+    t_comp = flops / (n * hw.peak_flops_bf16)
+    if strategy == "scatter_gather":
+        return t_comp + g.ops[-1].bytes_out / hw.ici_link_bytes_per_s
+    if strategy == "ai_core_assignment":
+        # Megatron-style TP: ~2 activation all-reduces per layer
+        coll = 2 * layers * (act / layers) * (n - 1) / n
+        return t_comp + coll / hw.ici_link_bytes_per_s
+    if strategy == "pipeline":
+        bubble = (n - 1) / (microbatches + n - 1)
+        bound = g.boundary_bytes(g.cut_segments(n))
+        coll = sum(bound)
+        return t_comp / (1 - bubble) + coll / hw.ici_link_bytes_per_s
+    if strategy == "fused":
+        s = max(2, n // 4)
+        w = n // s
+        bubble = (s - 1) / (microbatches + s - 1)
+        bound = sum(g.boundary_bytes(g.cut_segments(s)))
+        tp_coll = 2 * layers * (act / layers) * (w - 1) / max(w, 1)
+        return t_comp / (1 - bubble) + (bound + tp_coll) / hw.ici_link_bytes_per_s
+    raise ValueError(strategy)
+
+
+def main():
+    strategies = ("scatter_gather", "ai_core_assignment", "pipeline", "fused")
+    t0 = time.perf_counter()
+    print(f"{'arch':<24}" + "".join(f"{n:>14}" for n in (16, 64, 256)))
+    winners = {}
+    for arch in ARCH_IDS:
+        g = arch_graph(arch)
+        row = []
+        for n in (16, 64, 256):
+            best = min(strategies, key=lambda s: strategy_time(g, s, n))
+            winners[(arch, n)] = best
+            row.append(best[:12])
+        print(f"{arch:<24}" + "".join(f"{b:>14}" for b in row))
+    elapsed = time.perf_counter() - t0
+    dist = {}
+    for b in winners.values():
+        dist[b] = dist.get(b, 0) + 1
+    print("\nname,us_per_call,derived")
+    print(f"strategy_tpu,{1e6*elapsed/len(winners):.1f},winners={dist}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Quickstart: the paper's contribution in 60 seconds.
+
+1. Build the ResNet-18 computation graph (the paper's workload).
+2. Ask the scheduler for the best strategy at several cluster sizes —
+   watch the winner flip, which is the reason the cluster is
+   *reconfigurable*.
+3. Simulate the chosen plans and print latency + energy.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core.cost_model import ZYNQ7020
+from repro.core.graph import resnet18_graph
+from repro.core.scheduler import auto_schedule
+
+g = resnet18_graph()
+print(f"workload: {g.name}  ({g.total_macs/1e9:.2f} GMACs, "
+      f"{g.total_param_bytes/1e6:.1f} MB int8 weights, {len(g)} ops)\n")
+
+for n in (1, 2, 4, 8, 12):
+    choice = auto_schedule(g, n, ZYNQ7020)
+    alts = ", ".join(f"{s[:7]}={ms:.2f}" for s, ms in choice.alternatives.items())
+    print(f"N={n:>2}: best={choice.plan.strategy:<20} "
+          f"{choice.result.avg_ms_per_image:6.2f} ms/img  "
+          f"{choice.result.energy_j_per_image:6.3f} J/img   [{alts}]")
+
+print("\nThe winner flips with cluster size — scatter-gather at small N, "
+      "operator splitting once the network stops being the bottleneck. "
+      "That crossover is the paper's Fig. 3, and the scheduler exploits it "
+      "automatically.")

@@ -1,0 +1,50 @@
+"""Batched autoregressive serving example.
+
+Loads a reduced-config model, prefills a batch of prompts (chunked
+prefill path), then decodes tokens step by step with the KV cache —
+the CPU-scale version of the decode_32k dry-run cells.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models import transformer as tf
+from repro.serve.step import make_prefill_step, make_serve_step
+
+cfg = get_config("qwen3_0p6b").scaled_down(num_layers=4, d_model=192, vocab=2048)
+key = jax.random.PRNGKey(0)
+params = tf.init(key, cfg, jnp.float32)
+
+BATCH, PROMPT, NEW, MAXLEN = 4, 48, 24, 128
+prompts = jax.random.randint(key, (BATCH, PROMPT), 0, cfg.vocab)
+
+prefill = jax.jit(make_prefill_step(cfg, chunk=16))
+decode = jax.jit(make_serve_step(cfg))
+
+caches = tf.init_caches(cfg, BATCH, MAXLEN, jnp.float32)
+t0 = time.time()
+tok, caches = prefill(params, prompts, caches)
+tok = tok[:, None]
+t_prefill = time.time() - t0
+
+out = [tok]
+t0 = time.time()
+for _ in range(NEW - 1):
+    tok, caches = decode(params, tok, caches)
+    out.append(tok)
+jax.block_until_ready(tok)
+t_decode = time.time() - t0
+
+gen = jnp.concatenate(out, axis=1)
+print(f"prefill  : {BATCH} prompts x {PROMPT} tokens in {t_prefill*1e3:.0f} ms "
+      f"(chunked, 16-token chunks)")
+print(f"decode   : {NEW} steps x {BATCH} seqs in {t_decode*1e3:.0f} ms "
+      f"({BATCH*NEW/t_decode:.0f} tok/s on 1 CPU core)")
+print(f"generated shape: {gen.shape}; all ids < vocab: "
+      f"{bool(jnp.all(gen < cfg.vocab))}")
+assert gen.shape == (BATCH, NEW)

@@ -1,0 +1,59 @@
+"""Quantized serving on the VTA datapath (int8 x int8 -> int32).
+
+Demonstrates the Pallas kernel path end to end: a small MLP classifier is
+quantized to int8 and served via the fused GEMM+dequant kernel — the TPU
+analogue of deploying a model on the paper's FPGA cluster.  Outputs are
+compared against the f32 reference to show quantization error stays
+small.
+
+Run:  PYTHONPATH=src python examples/vta_serving.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+key = jax.random.PRNGKey(0)
+k1, k2, k3, k4 = jax.random.split(key, 4)
+
+# a small 2-layer MLP "model" with pretend-trained weights
+d_in, d_h, d_out = 256, 512, 10
+w1 = jax.random.normal(k1, (d_in, d_h)) * 0.05
+w2 = jax.random.normal(k2, (d_h, d_out)) * 0.05
+x = jax.random.normal(k3, (32, d_in))  # a batch of requests
+
+
+def f32_model(x):
+    h = jax.nn.relu(x @ w1)
+    return h @ w2
+
+
+# --- quantize (symmetric, per-tensor activations / per-channel weights)
+sx = float(jnp.max(jnp.abs(x))) / 127.0
+s1 = jnp.max(jnp.abs(w1), axis=0) / 127.0
+s2 = jnp.max(jnp.abs(w2), axis=0) / 127.0
+xq = ops.quantize(x, sx)
+w1q = ops.quantize(w1, s1[None, :])
+w2q = ops.quantize(w2, s2[None, :])
+
+
+def vta_model(xq):
+    # layer 1: int8 GEMM + f32 dequant epilogue, relu, requantize
+    h = ops.dense_int8(xq, w1q, s1 * sx, interpret=True)
+    h = jax.nn.relu(h)
+    sh = float(jnp.max(jnp.abs(h))) / 127.0
+    hq = ops.quantize(h, sh)
+    return ops.dense_int8(hq, w2q, s2 * sh, interpret=True)
+
+
+ref = f32_model(x)
+got = vta_model(xq)
+err = float(jnp.max(jnp.abs(got - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+agree = float(jnp.mean((jnp.argmax(got, -1) == jnp.argmax(ref, -1)).astype(jnp.float32)))
+
+print(f"f32 vs int8-VTA relative error : {err:.3%}")
+print(f"top-1 agreement on 32 requests : {agree:.0%}")
+assert agree >= 0.9, "quantized serving diverged"
+print("served on the VTA GEMM+dequant kernel (interpret mode on CPU; "
+      "the same pallas_call targets the 128x128 MXU on TPU).")

@@ -1,0 +1,57 @@
+"""ClusterPlan -> JAX runtime translation.
+
+The bridge between the paper-faithful planner (repro.core.strategies)
+and the TPU runtime (repro.dist):
+
+  scatter_gather      -> pure-DP shardings (params replicated)
+  ai_core_assignment  -> TP/EP shardings (model axis on bottleneck ops)
+  fused               -> FSDP x TP 2D shardings (the dry-run default)
+  pipeline            -> stage count + microbatches for
+                         repro.dist.pipeline
+
+so ``auto_schedule`` decisions made against the cost model translate
+directly into launcher configuration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from jax.sharding import Mesh
+
+from repro.core.strategies import ClusterPlan
+from repro.dist.sharding import param_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    strategy: str
+    #: strategy string accepted by repro.dist.sharding.param_specs
+    sharding_strategy: str
+    #: pipeline configuration (None unless strategy == 'pipeline')
+    pipeline_stages: int | None
+    num_microbatches: int | None
+
+    def param_specs(self, params, mesh: Mesh):
+        return param_specs(params, mesh, self.sharding_strategy)
+
+
+def to_placement(plan: ClusterPlan, mesh: Mesh, num_microbatches: int = 8) -> Placement:
+    if plan.strategy == "pipeline":
+        return Placement(
+            strategy="pipeline",
+            sharding_strategy="fused",  # stage-internal params stay 2D
+            pipeline_stages=mesh.shape.get("model", 1),
+            num_microbatches=num_microbatches,
+        )
+    mapping = {
+        "scatter_gather": "scatter_gather",
+        "ai_core_assignment": "ai_core_assignment",
+        "fused": "fused",
+    }
+    return Placement(
+        strategy=plan.strategy,
+        sharding_strategy=mapping[plan.strategy],
+        pipeline_stages=None,
+        num_microbatches=None,
+    )

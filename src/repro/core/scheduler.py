@@ -1,0 +1,191 @@
+"""Strategy selection, prediction, and reconfiguration.
+
+The cluster's headline property is *reconfigurability*: the best schedule
+depends on the workload and the cluster size (the paper's tables show the
+winner flipping from scatter-gather to AI-core-assignment around N=7).
+This module is the piece that exploits it:
+
+* :func:`predict` — closed-form latency estimate per strategy (fast inner
+  loop for planning; the DES in :mod:`repro.core.simulator` is ground
+  truth).
+* :func:`auto_schedule` — pick the best plan for (graph, cluster) by
+  simulating candidate plans.
+* :func:`rebalance` — straggler mitigation: given observed per-node rates,
+  re-cut pipeline stages / re-apportion AI-core slots so slow nodes get
+  proportionally less work.  This is the fault-tolerance hook the runtime
+  calls when the monitor flags a straggler.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+from repro.core.cost_model import BoardModel, NetworkModel, GBE
+from repro.core.graph import Graph
+from repro.core.simulator import SimResult, graph_service_time, simulate
+from repro.core.strategies import (
+    STRATEGIES,
+    ClusterPlan,
+    make_plan,
+)
+
+
+def predict(
+    graph: Graph,
+    strategy: str,
+    num_nodes: int,
+    board: BoardModel,
+    net: NetworkModel = GBE,
+) -> float:
+    """Cheap closed-form per-image seconds (planning heuristic)."""
+    t1 = graph_service_time(board, graph)
+    in_t = net.xfer_time(graph.ops[0].bytes_in)
+    out_t = net.xfer_time(graph.ops[-1].bytes_out, board.cpu_net_s_per_byte)
+    if strategy == "scatter_gather":
+        return max(t1 / num_nodes, in_t) + out_t / num_nodes
+    if strategy == "pipeline":
+        segs = graph.cut_segments(num_nodes)
+        stage_t = [
+            sum(sum(board.op_time_parts(op, 1, False)) for op in seg) for seg in segs
+        ]
+        bounds = graph.boundary_bytes(segs)
+        xfer = [net.xfer_time(b, board.cpu_net_s_per_byte) for b in bounds]
+        per_stage = [
+            stage_t[i] + (xfer[i] if i < len(xfer) else 0.0)
+            for i in range(len(stage_t))
+        ]
+        return max(per_stage + [in_t])
+    if strategy in ("ai_core_assignment", "fused"):
+        plan = make_plan(graph, strategy, num_nodes)
+        # service time of the busiest node + its share of reshard traffic
+        node_t: dict[int, float] = {}
+        for op in graph.ops:
+            nodes = plan.assignment[op.name][: plan.way_split(op)]
+            k = len(nodes)
+            for nd in nodes:
+                g, a, w, f = board.op_time_parts(op, k, False)
+                if plan.op_batch > 1:
+                    w, f = w / plan.op_batch, f / plan.op_batch
+                node_t[nd] = node_t.get(nd, 0.0) + g + a + w + f
+        reshard = sum(
+            net.xfer_time(op.bytes_out, board.cpu_net_s_per_byte)
+            for op in graph.ops[:-1]
+        ) / max(num_nodes, 1)
+        return max(node_t.values()) + reshard
+    raise ValueError(strategy)
+
+
+@dataclasses.dataclass
+class ScheduleChoice:
+    plan: ClusterPlan
+    result: SimResult
+    alternatives: dict[str, float]  # strategy -> avg_ms
+
+
+def auto_schedule(
+    graph: Graph,
+    num_nodes: int,
+    board: BoardModel,
+    net: NetworkModel = GBE,
+    strategies: Sequence[str] = STRATEGIES,
+    slowdown: Mapping[int, float] | None = None,
+) -> ScheduleChoice:
+    """Simulate every candidate strategy; return the fastest plan."""
+    best: tuple[float, ClusterPlan, SimResult] | None = None
+    alts: dict[str, float] = {}
+    for s in strategies:
+        plan = make_plan(graph, s, num_nodes)
+        r = simulate(graph, plan, board, net, slowdown=slowdown)
+        alts[s] = r.avg_ms_per_image
+        if best is None or r.avg_ms_per_image < best[0]:
+            best = (r.avg_ms_per_image, plan, r)
+    assert best is not None
+    return ScheduleChoice(plan=best[1], result=best[2], alternatives=alts)
+
+
+def rebalance(
+    graph: Graph,
+    plan: ClusterPlan,
+    node_rates: Mapping[int, float],
+) -> ClusterPlan:
+    """Straggler mitigation by reconfiguration.
+
+    ``node_rates`` are observed relative speeds (1.0 = nominal; 0.5 = node
+    at half speed).  We re-derive the plan with the *effective* node count
+    and remap logical slots onto physical nodes so the slowest nodes hold
+    the fewest op-slices — the reconfigurable-cluster answer to
+    stragglers, as opposed to dropping the node entirely (which
+    ``repro.ft`` handles via elastic restart).
+    """
+    if plan.strategy == "scatter_gather":
+        return plan  # round-robin already self-balances via FIFO queues
+
+    if plan.strategy == "pipeline":
+        # re-CUT the stages so each node's stage cost is proportional to
+        # its observed rate (a slow node gets a short stage)
+        n = plan.num_nodes
+        rates = [max(node_rates.get(i, 1.0), 1e-3) for i in range(n)]
+        total = sum(op.macs for op in graph.ops)
+        rsum = sum(rates)
+        stages: list[list] = []
+        assignment: dict[str, tuple[int, ...]] = {}
+        ops = list(graph.ops)
+        idx = 0
+        for s in range(n):
+            target = total * rates[s] / rsum
+            seg: list = []
+            acc = 0.0
+            while idx < len(ops) and (
+                acc < target or s == n - 1 or len(ops) - idx <= 0
+            ):
+                if s < n - 1 and seg and acc + ops[idx].macs > target * 1.5:
+                    break
+                # always leave at least one op per remaining stage
+                if s < n - 1 and len(ops) - idx <= (n - 1 - s):
+                    break
+                seg.append(ops[idx])
+                acc += ops[idx].macs
+                idx += 1
+            if not seg:  # guarantee non-empty stages
+                seg.append(ops[idx])
+                idx += 1
+            stages.append(seg)
+        from repro.core.strategies import StagePlan
+
+        stage_plans = []
+        for s, seg in enumerate(stages):
+            names = tuple(op.name for op in seg)
+            stage_plans.append(StagePlan(names, (s,)))
+            for nm in names:
+                assignment[nm] = (s,)
+        rebalanced = dataclasses.replace(
+            plan, stages=tuple(stage_plans), assignment=assignment
+        )
+        rebalanced.validate(graph)
+        return rebalanced
+
+    # ai_core / fused: permute logical slots so the fastest physical
+    # nodes take the most op-slices
+    order = sorted(
+        range(plan.num_nodes * plan.replicas), key=lambda n: -node_rates.get(n, 1.0)
+    )
+    load = {nd: 0.0 for nd in range(plan.num_nodes * plan.replicas)}
+    for op in graph.ops:
+        for nd in plan.assignment[op.name]:
+            load[nd] += op.macs / max(len(plan.assignment[op.name]), 1)
+    logical_by_load = sorted(load, key=lambda nd: -load[nd])
+    remap = {logical: order[i] for i, logical in enumerate(logical_by_load)}
+    new_assignment = {
+        name: tuple(remap[nd] for nd in nodes)
+        for name, nodes in plan.assignment.items()
+    }
+    new_stages = tuple(
+        dataclasses.replace(st, nodes=tuple(remap[nd] for nd in st.nodes))
+        for st in plan.stages
+    )
+    rebalanced = dataclasses.replace(
+        plan, assignment=new_assignment, stages=new_stages
+    )
+    rebalanced.validate(graph)
+    return rebalanced

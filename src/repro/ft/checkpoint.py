@@ -1,0 +1,172 @@
+"""Sharding-aware checkpointing: per-leaf .npy shards + JSON manifest.
+
+Design points for pod scale:
+
+* **Atomicity**: writes go to ``<dir>.tmp`` and are renamed into place —
+  a crash mid-save never corrupts the latest checkpoint.
+* **Async**: ``AsyncCheckpointer`` snapshots to host memory
+  (``jax.device_get``) on the caller's thread — O(HBM->DRAM), fast —
+  then serializes on a background thread so training never blocks on
+  the filesystem (the overlap trick every production trainer uses).
+* **Rotation**: keeps the newest ``keep`` checkpoints.
+* **Elastic restore**: leaves are stored as *full* (unsharded) arrays,
+  so ``restore`` can re-shard onto ANY mesh/topology — the elastic
+  rescale path (ft/elastic.py) and the node-failure recovery story both
+  reduce to "restore onto the new mesh".
+
+bf16 leaves round-trip via ml_dtypes (numpy extension dtypes).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(state):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(state)
+    return leaves, treedef
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for pk in path:
+        if hasattr(pk, "key"):
+            parts.append(str(pk.key))
+        elif hasattr(pk, "idx"):
+            parts.append(str(pk.idx))
+        elif hasattr(pk, "name"):
+            parts.append(str(pk.name))
+        else:
+            parts.append(str(pk))
+    return "__".join(parts) or "root"
+
+
+def save(directory: str, state, step: int | None = None) -> str:
+    """Synchronous atomic checkpoint save.  Returns the final path."""
+    host_state = jax.device_get(state)
+    return _write(directory, host_state, step)
+
+
+def _write(directory: str, host_state, step) -> str:
+    tmp = directory + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, _ = _flatten(host_state)
+    manifest = {"step": step, "leaves": [], "format": 1, "time": time.time()}
+    for path, leaf in leaves:
+        name = _leaf_name(path)
+        arr = np.asarray(leaf)
+        logical = str(arr.dtype)
+        if logical == "bfloat16":
+            # np.load can't reconstruct extension dtypes — store the bit
+            # pattern and record the logical dtype in the manifest
+            arr = arr.view(np.uint16)
+        np.save(os.path.join(tmp, name + ".npy"), arr, allow_pickle=False)
+        manifest["leaves"].append(
+            {"name": name, "shape": list(arr.shape), "dtype": logical}
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(directory):
+        shutil.rmtree(directory)
+    os.rename(tmp, directory)
+    return directory
+
+
+def restore(directory: str, like, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    NamedShardings — pass the NEW mesh's shardings to re-shard an old
+    checkpoint onto a different topology (elastic restart)."""
+    import json as _json
+
+    import ml_dtypes
+
+    with open(os.path.join(directory, "manifest.json")) as f:
+        dtypes = {l["name"]: l["dtype"] for l in _json.load(f)["leaves"]}
+    leaves, treedef = _flatten(like)
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_leaves(shardings)
+    out = []
+    for i, (path, _) in enumerate(leaves):
+        name = _leaf_name(path)
+        arr = np.load(os.path.join(directory, name + ".npy"), allow_pickle=False)
+        if dtypes.get(name) == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(root: str) -> int | None:
+    """Scan ``root`` for step_N checkpoint dirs; return max N or None."""
+    if not os.path.isdir(root):
+        return None
+    best = None
+    for d in os.listdir(root):
+        if d.startswith("step_") and os.path.isfile(
+            os.path.join(root, d, "manifest.json")
+        ):
+            n = int(d.split("_", 1)[1])
+            best = n if best is None else max(best, n)
+    return best
+
+
+class AsyncCheckpointer:
+    """Double-buffered background checkpointing with rotation.
+
+    save() blocks only for the device->host snapshot; serialization
+    happens on the worker thread.  wait() joins the in-flight write
+    (call before process exit / before restoring).
+    """
+
+    def __init__(self, root: str, keep: int = 2):
+        self.root = root
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(root, exist_ok=True)
+
+    def save(self, state, step: int) -> None:
+        host_state = jax.device_get(state)  # synchronous snapshot
+        self.wait()  # at most one write in flight
+
+        def work():
+            _write(os.path.join(self.root, f"step_{step}"), host_state, step)
+            self._rotate()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _rotate(self) -> None:
+        steps = sorted(
+            int(d.split("_", 1)[1])
+            for d in os.listdir(self.root)
+            if d.startswith("step_")
+            and os.path.isfile(os.path.join(self.root, d, "manifest.json"))
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s}"), ignore_errors=True)
+
+    def restore_latest(self, like, shardings=None):
+        self.wait()
+        step = latest_step(self.root)
+        if step is None:
+            return None, None
+        state = restore(os.path.join(self.root, f"step_{step}"), like, shardings)
+        return state, step

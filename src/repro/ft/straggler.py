@@ -1,0 +1,66 @@
+"""Straggler detection + mitigation.
+
+Detection is generic: feed per-node step durations into
+``StragglerMonitor``; nodes persistently slower than ``threshold`` x the
+cluster median get flagged.
+
+Mitigation is the paper's: *reconfigure* rather than wait or drop —
+
+  * cluster plans are re-balanced with :func:`repro.core.scheduler.
+    rebalance` (slow nodes get fewer op-slices / later pipeline stages),
+  * on a TPU mesh, persistent stragglers trigger the elastic path
+    instead (checkpoint -> reform mesh without the sick host -> resume;
+    ft/elastic.py), since SPMD steps are collectively synchronized and
+    one slow chip gates every step.
+
+Both behaviours are exercised in tests/test_ft.py against the
+discrete-event simulator with injected slowdowns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict, deque
+from typing import Mapping
+
+from repro.core.graph import Graph
+from repro.core.scheduler import rebalance
+from repro.core.strategies import ClusterPlan
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    rates: dict[int, float]  # node -> relative speed (1.0 = median)
+    stragglers: list[int]
+
+
+class StragglerMonitor:
+    """Sliding-window per-node step-duration tracker."""
+
+    def __init__(self, window: int = 16, threshold: float = 1.3):
+        self.window = window
+        self.threshold = threshold
+        self._hist: dict[int, deque] = defaultdict(lambda: deque(maxlen=window))
+
+    def record(self, node: int, duration_s: float) -> None:
+        self._hist[node].append(duration_s)
+
+    def report(self) -> StragglerReport:
+        means = {
+            n: sum(h) / len(h) for n, h in self._hist.items() if len(h) >= 2
+        }
+        if not means:
+            return StragglerReport(rates={}, stragglers=[])
+        med = sorted(means.values())[len(means) // 2]
+        rates = {n: med / m for n, m in means.items()}  # slow node -> <1
+        stragglers = [
+            n for n, m in means.items() if m > self.threshold * med
+        ]
+        return StragglerReport(rates=rates, stragglers=sorted(stragglers))
+
+
+def mitigate(graph: Graph, plan: ClusterPlan, report: StragglerReport) -> ClusterPlan:
+    """Reconfigure the plan so flagged stragglers get the least work."""
+    if not report.stragglers:
+        return plan
+    return rebalance(graph, plan, report.rates)

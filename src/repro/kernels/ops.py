@@ -1,0 +1,165 @@
+"""Public jit'd wrappers around the Pallas VTA kernels.
+
+Handles what the raw kernels do not: arbitrary shapes (padding to block
+multiples), conv-as-GEMM lowering (im2col — how VTA executes 2D
+convolutions on its GEMM core), quantization helpers, and the
+``interpret`` switch used to validate on CPU.
+
+Table I / §IV accelerator configurations are exposed as block presets so
+the benchmarks can sweep exactly the reconfigurations the paper did.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vta_alu import vta_alu
+from repro.kernels.vta_gemm import vta_gemm, vmem_footprint_bytes
+
+# VTA configurations mapped to TPU tile presets.  The paper's BLOCK is
+# the intrinsic; on the MXU we keep tiles >= 128 for full utilization and
+# treat BLOCK as the minimum alignment (DESIGN.md §2).
+BLOCK_PRESETS = {
+    "table1": dict(block_m=128, block_n=128, block_k=128),  # BLOCK=16 -> MXU 128
+    "section4_big": dict(block_m=128, block_n=256, block_k=256),  # BLOCK=32, 2x buffers
+}
+
+
+def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % m
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def quantize(x: jax.Array, scale: float | jax.Array) -> jax.Array:
+    """f32 -> int8 symmetric quantization."""
+    return jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+
+
+def matmul_int8(
+    a: jax.Array,
+    w: jax.Array,
+    *,
+    preset: str = "table1",
+    interpret: bool = False,
+    **block_overrides,
+) -> jax.Array:
+    """(M, K) int8 x (K, N) int8 -> (M, N) int32, arbitrary shapes."""
+    blocks = dict(BLOCK_PRESETS[preset], **block_overrides)
+    m, k = a.shape
+    _, n = w.shape
+    ap = _pad_to(_pad_to(a, blocks["block_m"], 0), blocks["block_k"], 1)
+    wp = _pad_to(_pad_to(w, blocks["block_k"], 0), blocks["block_n"], 1)
+    out = vta_gemm(ap, wp, interpret=interpret, **blocks)
+    return out[:m, :n]
+
+
+def dense_int8(
+    a: jax.Array,
+    w: jax.Array,
+    scale: jax.Array,
+    *,
+    preset: str = "table1",
+    interpret: bool = False,
+) -> jax.Array:
+    """Quantized dense layer with fused f32 dequant epilogue."""
+    blocks = BLOCK_PRESETS[preset]
+    m, k = a.shape
+    _, n = w.shape
+    ap = _pad_to(_pad_to(a, blocks["block_m"], 0), blocks["block_k"], 1)
+    wp = _pad_to(_pad_to(w, blocks["block_k"], 0), blocks["block_n"], 1)
+    sp = _pad_to(scale, blocks["block_n"], 0)
+    out = vta_gemm(ap, wp, scale=sp, epilogue="dequant", interpret=interpret, **blocks)
+    return out[:m, :n]
+
+
+def dense_requant_int8(
+    a: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+    *,
+    shift: int = 8,
+    relu: bool = True,
+    preset: str = "table1",
+    interpret: bool = False,
+) -> jax.Array:
+    """Fully int8 pipeline: GEMM + bias + shift-requant (+ReLU) -> int8."""
+    blocks = BLOCK_PRESETS[preset]
+    m, k = a.shape
+    _, n = w.shape
+    ap = _pad_to(_pad_to(a, blocks["block_m"], 0), blocks["block_k"], 1)
+    wp = _pad_to(_pad_to(w, blocks["block_k"], 0), blocks["block_n"], 1)
+    bp = _pad_to(bias, blocks["block_n"], 0)
+    out = vta_gemm(ap, wp, bias=bp, epilogue="requant", shift=shift, relu=relu,
+                   interpret=interpret, **blocks)
+    return out[:m, :n]
+
+
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int) -> tuple[jax.Array, int, int]:
+    """NHWC -> (N*HO*WO, KH*KW*C) patches, SAME padding."""
+    n, h, w, c = x.shape
+    ho, wo = -(-h // stride), -(-w // stride)
+    ph, pw = (ho - 1) * stride + kh - h, (wo - 1) * stride + kw - w
+    pt, pb = max(ph // 2, 0), max(ph - ph // 2, 0)
+    pl_, pr = max(pw // 2, 0), max(pw - pw // 2, 0)
+    xp = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(
+                jax.lax.slice(
+                    xp,
+                    (0, i, j, 0),
+                    (n, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    patches = jnp.concatenate(cols, axis=-1)  # (N, HO, WO, KH*KW*C)
+    return patches.reshape(n * ho * wo, kh * kw * c), ho, wo
+
+
+def vta_conv2d(
+    x: jax.Array,  # (N, H, W, C) int8
+    w: jax.Array,  # (KH, KW, C, F) int8
+    *,
+    stride: int = 1,
+    preset: str = "table1",
+    interpret: bool = False,
+) -> jax.Array:
+    """2D convolution on the VTA GEMM core via im2col (SAME padding).
+    Returns int32 NHWC."""
+    n = x.shape[0]
+    kh, kw, c, f = w.shape
+    patches, ho, wo = _im2col(x, kh, kw, stride)
+    wmat = w.reshape(kh * kw * c, f)
+    out = matmul_int8(patches, wmat, preset=preset, interpret=interpret)
+    return out.reshape(n, ho, wo, f)
+
+
+def alu(x, y=None, **kw):
+    """Padded wrapper over the VTA ALU kernel (arbitrary leading dim)."""
+    block = kw.pop("block", 256)
+    m, n = x.shape
+    xp = _pad_to(x, block, 0)
+    yp = _pad_to(y, block, 0) if y is not None else None
+    out = vta_alu(xp, yp, block=block, **kw)
+    return out[:m]
+
+
+__all__ = [
+    "BLOCK_PRESETS",
+    "alu",
+    "dense_int8",
+    "dense_requant_int8",
+    "matmul_int8",
+    "quantize",
+    "vta_conv2d",
+    "vmem_footprint_bytes",
+]

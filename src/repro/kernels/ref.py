@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a, w):
+    """int8 x int8 -> int32 (the VTA GEMM core semantics)."""
+    return jnp.dot(a.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def gemm_requant_ref(a, w, bias, shift: int, relu: bool):
+    acc = gemm_ref(a, w) + bias[None, :].astype(jnp.int32)
+    acc = jax.lax.shift_right_arithmetic(acc, shift)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    return jnp.clip(acc, -128, 127).astype(jnp.int8)
+
+
+def gemm_dequant_ref(a, w, scale):
+    return gemm_ref(a, w).astype(jnp.float32) * scale[None, :]
+
+
+def alu_ref(x, y, op: str, imm: int = 0, shift: int = 0):
+    """VTA ALU ops on int32 tensors."""
+    xi = x.astype(jnp.int32)
+    yi = y.astype(jnp.int32) if y is not None else None
+    if op == "add":
+        out = xi + yi
+    elif op == "max":
+        out = jnp.maximum(xi, yi)
+    elif op == "min":
+        out = jnp.minimum(xi, yi)
+    elif op == "add_imm":
+        out = xi + imm
+    elif op == "max_imm":
+        out = jnp.maximum(xi, imm)
+    elif op == "relu":
+        out = jnp.maximum(xi, 0)
+    elif op == "shr":
+        out = jax.lax.shift_right_arithmetic(xi, shift)
+    else:
+        raise ValueError(op)
+    return out
+
+
+def conv2d_ref(x_int8, w_int8, stride: int = 1):
+    """int8 NHWC conv via lax (oracle for vta_conv2d)."""
+    return jax.lax.conv_general_dilated(
+        x_int8.astype(jnp.int32),
+        w_int8.astype(jnp.int32),
+        (stride, stride),
+        "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def quantize_ref(x, scale):
+    return jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)

@@ -1,0 +1,85 @@
+"""VTA ALU as a Pallas TPU kernel.
+
+VTA's register-file ALU executes element-wise tensor ops (add, max/min,
+immediate variants, shifts — the building blocks of bias/activation/
+pooling in the int8 pipeline).  On TPU these map to the VPU over VMEM
+tiles; one kernel covers the whole op table via a static ``op`` argument
+(resolved at trace time, so each variant compiles to a dedicated
+kernel, same as VTA micro-op sequences).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+_BINARY = ("add", "max", "min")
+_UNARY = ("add_imm", "max_imm", "relu", "shr")
+
+
+def _alu_kernel(x_ref, y_ref, out_ref, *, op: str, imm: int, shift: int):
+    x = x_ref[...].astype(jnp.int32)
+    y = y_ref[...].astype(jnp.int32)
+    if op == "add":
+        out_ref[...] = x + y
+    elif op == "max":
+        out_ref[...] = jnp.maximum(x, y)
+    elif op == "min":
+        out_ref[...] = jnp.minimum(x, y)
+
+
+def _alu_unary_kernel(x_ref, out_ref, *, op: str, imm: int, shift: int):
+    x = x_ref[...].astype(jnp.int32)
+    if op == "add_imm":
+        out_ref[...] = x + imm
+    elif op == "max_imm":
+        out_ref[...] = jnp.maximum(x, imm)
+    elif op == "relu":
+        out_ref[...] = jnp.maximum(x, 0)
+    elif op == "shr":
+        out_ref[...] = jax.lax.shift_right_arithmetic(x, shift)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("op", "imm", "shift", "block", "interpret")
+)
+def vta_alu(
+    x: jax.Array,
+    y: jax.Array | None = None,
+    *,
+    op: str = "add",
+    imm: int = 0,
+    shift: int = 0,
+    block: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Element-wise VTA ALU op over (M, N) int32 tensors (M % block == 0
+    after ops.py padding; N is the lane dimension)."""
+    m, n = x.shape
+    assert m % block == 0, (m, block)
+    grid = (m // block,)
+    spec = pl.BlockSpec((block, n), lambda i: (i, 0))
+    if op in _BINARY:
+        assert y is not None and y.shape == x.shape
+        return pl.pallas_call(
+            functools.partial(_alu_kernel, op=op, imm=imm, shift=shift),
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+            grid=grid,
+            in_specs=[spec, spec],
+            out_specs=spec,
+            interpret=interpret,
+        )(x, y)
+    if op in _UNARY:
+        return pl.pallas_call(
+            functools.partial(_alu_unary_kernel, op=op, imm=imm, shift=shift),
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+            grid=grid,
+            in_specs=[spec],
+            out_specs=spec,
+            interpret=interpret,
+        )(x)
+    raise ValueError(f"unknown ALU op {op!r}")

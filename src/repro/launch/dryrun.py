@@ -1,0 +1,268 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the right step function (train_step / prefill / serve_step)
+     against ShapeDtypeStruct inputs with explicit in/out shardings,
+  3. compiles, printing memory_analysis() (proves it fits) and
+     cost_analysis() (FLOPs/bytes for the roofline),
+  4. parses collective bytes out of the partitioned HLO,
+  5. appends one JSON record per cell to --out (EXPERIMENTS.md §Dry-run
+     and benchmarks/roofline.py read that file).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_0p6b \
+      --shape train_4k [--multi-pod] [--out dryrun_results.jsonl]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.dist.sharding import (
+    batch_spec,
+    cache_specs,
+    data_specs,
+    dp_axes,
+    fix_spec,
+    param_specs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as specs_mod
+from repro.optim.adamw import AdamWConfig, OptState
+from repro.serve.step import make_prefill_step, make_serve_step
+from repro.train.step import make_train_step
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_specs(state_shapes, mesh, strategy="fused"):
+    pspecs = param_specs(state_shapes["params"], mesh, strategy)
+    return {
+        "params": pspecs,
+        "opt": OptState(mu=pspecs, nu=pspecs, step=P()),
+        "step": P(),
+    }
+
+
+def batch_specs_tree(batch_shapes, mesh):
+    return data_specs(batch_shapes, mesh)
+
+
+# ---------------------------------------------------------------------------
+# collective-bytes parsing (§Roofline: not in cost_analysis)
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(\([^)]*\)|[a-z0-9_\[\]{},/ ]+)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the (partitioned)
+    HLO.  Uses the *per-shard* shapes of the post-SPMD module, i.e. bytes
+    moved per device per step."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*((?:\([^)]*\)|\S+))\s+(all-gather|all-reduce|"
+                      r"reduce-scatter|all-to-all|collective-permute)", line)
+        if not m:
+            continue
+        shapes = _SHAPE_RE.findall(m.group(1))
+        nbytes = 0.0
+        for dt, dims in shapes:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES.get(dt, 4)
+        out[m.group(2)] += nbytes
+    out["total"] = sum(out.values())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# lowering per shape kind
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(arch: str, shape_name: str, mesh, strategy: str = "fused",
+               grad_accum: int | None = None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name in cfg.skip_shapes:
+        return None
+    specs = specs_mod.input_specs(cfg, shape)
+
+    with mesh:
+        if shape.kind == "train":
+            ga = grad_accum if grad_accum is not None else (
+                specs_mod.TRAIN_GRAD_ACCUM.get(arch, 1)
+            )
+            step = make_train_step(cfg, AdamWConfig(), grad_accum=ga)
+            s_specs = state_specs(specs["state"], mesh, strategy)
+            b_specs = batch_specs_tree(specs["batch"], mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(_ns(mesh, s_specs), _ns(mesh, b_specs)),
+                out_shardings=(_ns(mesh, s_specs), None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(specs["state"], specs["batch"])
+        elif shape.kind == "prefill":
+            pstep = make_prefill_step(cfg)
+            p_specs = param_specs(specs_mod.param_shapes(cfg), mesh, strategy)
+            c_specs = cache_specs(specs["caches"], mesh)
+            in_sh = [
+                _ns(mesh, p_specs),
+                _ns(mesh, data_specs(specs["tokens"], mesh)),
+                _ns(mesh, c_specs),
+            ]
+            args = [specs_mod.param_shapes(cfg), specs["tokens"], specs["caches"]]
+            if cfg.frontend == "vision":
+                fn = lambda p, t, c, e: pstep(p, t, c, embeds=e)
+                in_sh.append(_ns(mesh, data_specs(specs["embeds"], mesh)))
+                args.append(specs["embeds"])
+            elif cfg.is_enc_dec:
+                fn = lambda p, t, c, f: pstep(p, t, c, frames=f)
+                in_sh.append(_ns(mesh, data_specs(specs["frames"], mesh)))
+                args.append(specs["frames"])
+            else:
+                fn = pstep
+            jitted = jax.jit(fn, in_shardings=tuple(in_sh), donate_argnums=(2,))
+            lowered = jitted.lower(*args)
+        else:  # decode
+            sstep = make_serve_step(cfg)
+            p_specs = param_specs(specs_mod.param_shapes(cfg), mesh, strategy)
+            c_specs = cache_specs(specs["caches"], mesh)
+            in_sh = [
+                _ns(mesh, p_specs),
+                _ns(mesh, data_specs(specs["token"], mesh)),
+                _ns(mesh, c_specs),
+            ]
+            args = [specs_mod.param_shapes(cfg), specs["token"], specs["caches"]]
+            if cfg.is_enc_dec:
+                dp = dp_axes(mesh)
+                dpa = dp if len(dp) > 1 else dp[0]
+                kv_spec = jax.tree.map(
+                    lambda l: P(*fix_spec((None, dpa, None, "model", None),
+                                          l.shape, mesh)),
+                    specs["kv"],
+                )
+                in_sh.append(_ns(mesh, kv_spec))
+                args.append(specs["kv"])
+            jitted = jax.jit(sstep, in_shardings=tuple(in_sh), donate_argnums=(2,))
+            lowered = jitted.lower(*args)
+    return lowered
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, strategy: str = "fused",
+             grad_accum: int | None = None, verbose: bool = True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered = lower_cell(arch, shape_name, mesh, strategy, grad_accum)
+    if lowered is None:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped",
+                "reason": "full-attention arch at 500k (DESIGN.md §5)"}
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "strategy": strategy,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "per_device_mem_bytes": getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0)
+        + getattr(mem, "temp_size_in_bytes", 0),
+        "arg_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "collective_bytes": coll,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
+              f"compile {t_compile:.0f}s, "
+              f"temp {rec['temp_bytes']/2**30:.2f} GiB/dev, "
+              f"flops {rec['flops']:.3g}, coll {coll['total']/2**20:.1f} MiB/dev")
+        print("  memory_analysis:", mem)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--strategy", default="fused",
+                    choices=["fused", "ai_core_assignment", "scatter_gather"])
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    args = ap.parse_args(argv)
+
+    cells = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = 0
+    with open(args.out, "a") as f:
+        for a, s, mp in cells:
+            try:
+                rec = run_cell(a, s, multi_pod=mp, strategy=args.strategy,
+                               grad_accum=args.grad_accum)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures += 1
+                rec = {"arch": a, "shape": s,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "error", "error": f"{type(e).__name__}: {e}"[:500]}
+                print(f"[dryrun] FAIL {a} x {s}: {rec['error'][:200]}",
+                      file=sys.stderr)
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

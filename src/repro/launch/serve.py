@@ -1,0 +1,79 @@
+"""Production serving launcher: batched prefill + decode loop.
+
+``python -m repro.launch.serve --arch <id> --smoke`` runs the chunked
+prefill + KV-cache decode loop on local devices with a reduced config;
+on a pod the same code path shards params/caches per the serving
+strategy (TP-biased by default — see EXPERIMENTS.md §Perf iteration A).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.dist.sharding import cache_specs, param_specs
+from repro.ft.elastic import make_mesh_for
+from repro.models import transformer as tf
+from repro.serve.step import make_prefill_step, make_serve_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_0p6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--strategy", default="fused")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.scaled_down()
+    if cfg.is_enc_dec or cfg.frontend:
+        raise SystemExit("use examples/serve_batched.py variants for "
+                         "frontend/enc-dec archs")
+    mesh = make_mesh_for(jax.devices())
+    max_len = args.prompt + args.new_tokens
+
+    with mesh:
+        params = tf.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        params = jax.tree.map(
+            jax.device_put, params,
+            jax.tree.map(lambda s: NamedSharding(mesh, s),
+                         param_specs(params, mesh, args.strategy),
+                         is_leaf=lambda x: isinstance(x, P)),
+        )
+        caches = tf.init_caches(cfg, args.batch, max_len, jnp.float32)
+        caches = jax.tree.map(
+            jax.device_put, caches,
+            jax.tree.map(lambda s: NamedSharding(mesh, s),
+                         cache_specs(caches, mesh),
+                         is_leaf=lambda x: isinstance(x, P)),
+        )
+        prefill = jax.jit(make_prefill_step(cfg, chunk=max(16, args.prompt // 4)))
+        decode = jax.jit(make_serve_step(cfg))
+
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(1), (args.batch, args.prompt), 0, cfg.vocab
+        )
+        t0 = time.time()
+        tok, caches = prefill(params, prompts, caches)
+        tok = tok[:, None]
+        print(f"prefill {args.batch}x{args.prompt} in {(time.time()-t0)*1e3:.0f} ms")
+        t0 = time.time()
+        for _ in range(args.new_tokens - 1):
+            tok, caches = decode(params, tok, caches)
+        jax.block_until_ready(tok)
+        dt = time.time() - t0
+        print(f"decode {args.new_tokens} steps: "
+              f"{args.batch * args.new_tokens / dt:.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""ShapeDtypeStruct input specs for every (architecture x input shape).
+
+Nothing here allocates device memory: model/optimizer/cache shapes come
+from ``jax.eval_shape`` and inputs are ShapeDtypeStructs — the dry-run
+lowers and compiles against these stand-ins.
+
+``grad_accum`` per (arch, shape) keeps the per-device live microbatch
+small enough for the remat stash to fit 16 GiB HBM (derivation in
+EXPERIMENTS.md §Dry-run); it changes wall-clock shape, not semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec, transformer
+
+
+# per-device microbatch target ~8k tokens during training (remat stash
+# budget); grad_accum = global_tokens / (dp_shards * 8192) rounded to a
+# divisor of the global batch
+TRAIN_GRAD_ACCUM = {
+    # 16 == one sequence per dp shard per microbatch, the useful maximum
+    # on the 16-wide data axis (beyond that shards idle)
+    "deepseek_v2_236b": 16,
+    "mixtral_8x22b": 16,
+    "internvl2_76b": 16,
+    "qwen2_72b": 16,
+    "yi_34b": 16,
+    "starcoder2_15b": 8,
+    "zamba2_2p7b": 8,
+    "mamba2_2p7b": 8,
+    "qwen3_0p6b": 2,
+    "seamless_m4t_large_v2": 8,
+}
+
+# archs whose Adam moments are held in bf16 (memory fit at 72B-236B
+# scale; the 8-bit-Adam trade taken at 16 bits — EXPERIMENTS.md §Dry-run)
+BF16_MOMENTS = {"deepseek_v2_236b", "mixtral_8x22b", "internvl2_76b",
+                "qwen2_72b", "yi_34b"}
+
+# encoder frame count for the enc-dec model per shape kind
+ENC_FRAMES = {"train": 4096, "prefill": 4096, "decode": 1024}
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec):
+    gb, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((gb, s + 1), jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["embeds"] = jax.ShapeDtypeStruct(
+            (gb, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.is_enc_dec:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (gb, ENC_FRAMES["train"], cfg.d_model), jnp.bfloat16
+        )
+    return batch
+
+
+def state_shapes(cfg: ModelConfig, dtype=jnp.bfloat16):
+    from repro.train.step import init_state
+
+    mdt = jnp.bfloat16 if cfg.name in BF16_MOMENTS else jnp.float32
+    return jax.eval_shape(
+        lambda: init_state(jax.random.PRNGKey(0), cfg, dtype, mdt)
+    )
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.bfloat16):
+    model = encdec if cfg.is_enc_dec else transformer
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), cfg, dtype))
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    model = encdec if cfg.is_enc_dec else transformer
+    return jax.eval_shape(lambda: model.init_caches(cfg, batch, max_len, dtype))
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    inputs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.frontend == "vision":
+        inputs["embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.is_enc_dec:
+        inputs["frames"] = jax.ShapeDtypeStruct(
+            (b, ENC_FRAMES["prefill"], cfg.d_model), jnp.bfloat16
+        )
+    # prefill writes into a cache sized for the prompt
+    inputs["caches"] = cache_shapes(cfg, b, s + (cfg.frontend_tokens if cfg.frontend == "vision" else 0))
+    return inputs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """serve_step: ONE new token against a cache of seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    inputs = {
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "caches": cache_shapes(cfg, b, s),
+    }
+    if cfg.is_enc_dec:
+        t_enc = ENC_FRAMES["decode"]
+        inputs["kv"] = jax.eval_shape(
+            lambda p, e: encdec.cross_kv(p, cfg, e),
+            param_shapes(cfg),
+            jax.ShapeDtypeStruct((b, t_enc, cfg.d_model), jnp.bfloat16),
+        )
+    return inputs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Dispatch per shape kind.  Returns (kind, specs_dict)."""
+    if shape.kind == "train":
+        return {"state": state_shapes(cfg), "batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

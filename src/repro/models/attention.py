@@ -1,0 +1,284 @@
+"""Attention variants: GQA (+bias/qk_norm/SWA), MLA, cross-attention.
+
+All variants share one calling convention:
+
+    params = attn_init(key, cfg, dtype)
+    y, cache = attn_apply(params, cfg, x, positions, cache=None|KVCache)
+
+* ``cache=None``        — training / encoder forward (full causal or
+                          bidirectional attention, no state).
+* ``cache`` w/ len==0   — prefill: keys/values written into the cache.
+* ``cache`` w/ len==T   — decode: x is (B, 1, D), one new token.
+
+Caches are plain dicts so they shard/checkpoint like any pytree:
+GQA:  {"k": (B, T, Hkv, D), "v": (B, T, Hkv, Dv), "len": i32}
+SWA:  same but T == window and writes wrap (rolling buffer, O(window))
+MLA:  {"ckv": (B, T, R), "k_rope": (B, T, Dr), "len": i32} — the
+      compressed cache that makes deepseek-v2 long-context serving cheap.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import DP, MDL, hint
+from repro.models.layers import (
+    apply_rope,
+    causal_mask,
+    dense_apply,
+    dense_init,
+    flash_attend,
+    rmsnorm_apply,
+    rmsnorm_init,
+    softmax_attend,
+)
+
+# sequences at or above this length attend via the chunked online-softmax
+# path (never materializes S x T logits); shorter ones go direct
+FLASH_MIN_SEQ = 512
+
+
+# ---------------------------------------------------------------------------
+# GQA (covers MHA, GQA, SWA, qkv-bias, qk-norm)
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg, dtype):
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, hkv * hd, dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, hkv * hd, dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def gqa_cache_init(cfg, batch: int, max_len: int, dtype):
+    t = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return {
+        "k": jnp.zeros((batch, t, cfg.kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, t, cfg.kv_heads, cfg.head_dim), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _qkv(p, cfg, x, positions):
+    b, s, _ = x.shape
+    q = dense_apply(p["wq"], x).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = dense_apply(p["wk"], x).reshape(b, s, cfg.kv_heads, cfg.head_dim)
+    v = dense_apply(p["wv"], x).reshape(b, s, cfg.kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_apply(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(p, cfg, x, positions, cache=None, *, bidirectional=False):
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+
+    if cache is None:
+        if s >= FLASH_MIN_SEQ:
+            out = flash_attend(q, k, v, window=cfg.sliding_window,
+                               bidirectional=bidirectional)
+        else:
+            mask = (
+                jnp.ones((s, s), bool)
+                if bidirectional
+                else causal_mask(s, s, window=cfg.sliding_window)
+            )
+            out = softmax_attend(q, k, v, mask)
+        new_cache = None
+    else:
+        t = cache["k"].shape[1]
+        cur = cache["len"]
+        rolling = bool(cfg.sliding_window) and t <= cfg.sliding_window
+        if rolling:
+            # SWA rolling buffer, ordered-snapshot invariant: after every
+            # call, slot j holds the key for absolute position
+            # len - t + j (negative => slot not yet written, masked out).
+            # Works for chunked prefill AND decode: attend over
+            # [buffer | new keys], then keep the trailing `t` entries.
+            full_k = jnp.concatenate([cache["k"], k], axis=1)  # (b, t+s, ...)
+            full_v = jnp.concatenate([cache["v"], v], axis=1)
+            kv_pos = cur - t + jnp.arange(t + s)
+            q_pos = cur + jnp.arange(s)
+            mask = (kv_pos[None, :] <= q_pos[:, None]) & (kv_pos >= 0)[None, :]
+            mask &= kv_pos[None, :] > (q_pos[:, None] - cfg.sliding_window)
+            out = softmax_attend(q, full_k, full_v, mask)
+            ck, cv = full_k[:, s:], full_v[:, s:]
+            new_len = cur + s
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, cur, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, cur, 0, 0))
+            new_len = cur + s
+            if s >= FLASH_MIN_SEQ:
+                out = flash_attend(q, ck, cv, q_offset=cur,
+                                   window=cfg.sliding_window, kv_len=new_len)
+            else:
+                kv_pos = jnp.arange(t)
+                q_pos = jnp.arange(s) + cur
+                mask = kv_pos[None, :] <= q_pos[:, None]
+                mask &= (kv_pos < new_len)[None, :]
+                if cfg.sliding_window:
+                    mask &= kv_pos[None, :] > (q_pos[:, None] - cfg.sliding_window)
+                out = softmax_attend(q, ck, cv, mask)
+        new_cache = {"k": ck, "v": cv, "len": new_len}
+
+    y = dense_apply(p["wo"], out.reshape(b, s, -1))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (deepseek-v2)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    dn, dv = cfg.mla_head_dim, cfg.mla_v_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        # queries (nope + rope parts); q-lora omitted when rank == 0
+        "wq": dense_init(ks[0], d, h * (dn + dr), dtype),
+        # joint KV down-projection -> [c_kv (r) | k_rope (dr)]
+        "wdkv": dense_init(ks[1], d, r + dr, dtype),
+        "ckv_norm": rmsnorm_init(r, dtype),
+        # up-projections from the latent
+        "wuk": dense_init(ks[2], r, h * dn, dtype),
+        "wuv": dense_init(ks[3], r, h * dv, dtype),
+        "wo": dense_init(ks[4], h * dv, d, dtype),
+    }
+    if cfg.q_lora_rank:
+        p["wdq"] = dense_init(ks[5], d, cfg.q_lora_rank, dtype)
+        p["q_norm"] = rmsnorm_init(cfg.q_lora_rank, dtype)
+        p["wq"] = dense_init(ks[0], cfg.q_lora_rank, h * (dn + dr), dtype)
+    return p
+
+
+def mla_cache_init(cfg, batch: int, max_len: int, dtype):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _mla_qkv_latent(p, cfg, x, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.num_heads, cfg.mla_head_dim, cfg.rope_head_dim
+    xq = x
+    if cfg.q_lora_rank:
+        xq = rmsnorm_apply(p["q_norm"], dense_apply(p["wdq"], x), cfg.norm_eps)
+    q = dense_apply(p["wq"], xq).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = dense_apply(p["wdkv"], x)
+    ckv = rmsnorm_apply(p["ckv_norm"], dkv[..., : cfg.kv_lora_rank], cfg.norm_eps)
+    k_rope = dkv[..., cfg.kv_lora_rank :][:, :, None, :]  # 1 shared head
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def _mla_attend(p, cfg, q_nope, q_rope, ckv, k_rope, mask=None, *,
+                q_offset=0, kv_len=None):
+    """MLA attention: latent is up-projected per head; the rope part is a
+    single shared head concatenated onto the nope part so the chunked
+    flash path applies unchanged for long sequences."""
+    b, s, h, dn = q_nope.shape
+    t = ckv.shape[1]
+    dr = cfg.rope_head_dim
+    dv = cfg.mla_v_head_dim
+    k_nope = dense_apply(p["wuk"], ckv).reshape(b, t, h, dn)
+    v = dense_apply(p["wuv"], ckv).reshape(b, t, h, dv)
+    scale = (dn + dr) ** -0.5
+
+    if s >= FLASH_MIN_SEQ:
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # the shared rope head broadcasts across h: without a hint the
+        # concat (sharded h ++ replicated h) de-shards the whole key
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, t, h, dr))], axis=-1
+        )
+        q = hint(q, DP, None, MDL, None)
+        k = hint(k, DP, None, MDL, None)
+        out = flash_attend(q, k, v, q_offset=q_offset, kv_len=kv_len, scale=scale)
+        return out.reshape(b, s, h * dv)
+
+    logits = jnp.einsum("bshd,bthd->bhst", q_nope.astype(jnp.float32),
+                        k_nope.astype(jnp.float32))
+    logits += jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))
+    logits = logits * scale
+    logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h * dv).astype(q_nope.dtype)
+
+
+def mla_apply(p, cfg, x, positions, cache=None):
+    b, s, _ = x.shape
+    q_nope, q_rope, ckv, k_rope, = _mla_qkv_latent(p, cfg, x, positions)
+    if cache is None:
+        mask = causal_mask(s, s) if s < FLASH_MIN_SEQ else None
+        out = _mla_attend(p, cfg, q_nope, q_rope, ckv, k_rope, mask)
+        new_cache = None
+    else:
+        cur = cache["len"]
+        t = cache["ckv"].shape[1]
+        cc = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, cur, 0))
+        cr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope, (0, cur, 0))
+        new_len = cur + s
+        if s >= FLASH_MIN_SEQ:
+            out = _mla_attend(p, cfg, q_nope, q_rope, cc, cr,
+                              q_offset=cur, kv_len=new_len)
+        else:
+            kv_pos = jnp.arange(t)
+            q_pos = jnp.arange(s) + cur
+            mask = (kv_pos[None, :] <= q_pos[:, None]) & (kv_pos < new_len)[None, :]
+            out = _mla_attend(p, cfg, q_nope, q_rope, cc, cr, mask)
+        new_cache = {"ckv": cc, "k_rope": cr, "len": new_len}
+    return dense_apply(p["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec decoder blocks)
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_init(key, cfg, dtype):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, h * hd, dtype),
+        "wv": dense_init(ks[2], d, h * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+
+
+def cross_attn_kv(p, cfg, enc_out):
+    """Precompute encoder K/V once per request (the enc-dec 'cache')."""
+    b, t, _ = enc_out.shape
+    k = dense_apply(p["wk"], enc_out).reshape(b, t, cfg.num_heads, cfg.head_dim)
+    v = dense_apply(p["wv"], enc_out).reshape(b, t, cfg.num_heads, cfg.head_dim)
+    return {"k": k, "v": v}
+
+
+def cross_attn_apply(p, cfg, x, kv):
+    b, s, _ = x.shape
+    q = dense_apply(p["wq"], x).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    t = kv["k"].shape[1]
+    mask = jnp.ones((s, t), bool)
+    out = softmax_attend(q, kv["k"], kv["v"], mask)
+    return dense_apply(p["wo"], out.reshape(b, s, -1))

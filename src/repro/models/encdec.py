@@ -1,0 +1,196 @@
+"""Encoder-decoder transformer backbone (seamless-m4t-large-v2).
+
+The modality frontend is a STUB per the task spec: ``encode`` consumes
+*precomputed frame embeddings* (B, T_enc, D) — what the speech encoder's
+conv feature extractor would produce — and runs the transformer encoder.
+The decoder is a causal LM with cross-attention whose K/V over the
+encoder output are computed once per request (the enc-dec 'cache').
+
+Decode path: ``decode_step`` = causal self-attn (KV cache) + frozen
+cross-attn K/V + FFN, per layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import DP, MDL, hint, hint_dp
+from repro.models import attention as attn
+from repro.models.layers import (
+    dense_apply,
+    dense_init,
+    embedding_apply,
+    embedding_init,
+    gated_mlp_apply,
+    gated_mlp_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+)
+
+
+def _enc_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn.gqa_init(k1, cfg, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": gated_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_block_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "self_attn": attn.gqa_init(k1, cfg, dtype),
+        "norm_x": rmsnorm_init(cfg.d_model, dtype),
+        "cross_attn": attn.cross_attn_init(k2, cfg, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": gated_mlp_init(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init(key, cfg, dtype=jnp.bfloat16):
+    ke, kenc, kdec, kh = jax.random.split(key, 4)
+    return {
+        "embed": embedding_init(ke, cfg.vocab, cfg.d_model, dtype),
+        "encoder": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(
+            jax.random.split(kenc, cfg.encoder_layers)
+        ),
+        "enc_norm": rmsnorm_init(cfg.d_model, dtype),
+        "decoder": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(
+            jax.random.split(kdec, cfg.num_layers)
+        ),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": dense_init(kh, cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def encode(params, cfg, frame_embeds, *, remat=False):
+    """frame_embeds: (B, T_enc, D) from the (stubbed) frontend."""
+    x = frame_embeds
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(xc, p):
+        xc = hint_dp(xc)
+        h, _ = attn.gqa_apply(
+            p["attn"], cfg, rmsnorm_apply(p["norm1"], xc, cfg.norm_eps),
+            positions, None, bidirectional=True,
+        )
+        xc = xc + h
+        xc = xc + gated_mlp_apply(p["mlp"], rmsnorm_apply(p["norm2"], xc, cfg.norm_eps))
+        return xc, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rmsnorm_apply(params["enc_norm"], x, cfg.norm_eps)
+
+
+def cross_kv(params, cfg, enc_out):
+    """Precompute per-layer cross-attention K/V (stacked over layers)."""
+    kv = jax.vmap(
+        lambda p: attn.cross_attn_kv(p["cross_attn"], cfg, enc_out)
+    )(params["decoder"])
+    return jax.tree.map(lambda a: hint(a, None, DP, None, MDL, None), kv)
+
+
+def _dec_stack(params, cfg, x, positions, kv, caches, *, remat=False):
+    """Decoder stack; KV caches ride in the scan carry and update in
+    place (see transformer._scan_blocks for why)."""
+
+    def block(p, layer_kv, cache, xc):
+        xc = hint_dp(xc)
+        h, new_cache = attn.gqa_apply(
+            p["self_attn"], cfg, rmsnorm_apply(p["norm1"], xc, cfg.norm_eps),
+            positions, cache,
+        )
+        xc = xc + h
+        xc = xc + attn.cross_attn_apply(
+            p["cross_attn"], cfg, rmsnorm_apply(p["norm_x"], xc, cfg.norm_eps), layer_kv
+        )
+        xc = xc + gated_mlp_apply(p["mlp"], rmsnorm_apply(p["norm2"], xc, cfg.norm_eps))
+        return xc, new_cache
+
+    if caches is None:
+        def body(xc, layer_in):
+            p, layer_kv = layer_in
+            xc, _ = block(p, layer_kv, None, xc)
+            return xc, None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, (params["decoder"], kv))
+        return x, None
+
+    def body(carry, layer_in):
+        xc, cache_full, li = carry
+        p, layer_kv = layer_in
+        cache_i = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, li, 0, keepdims=False),
+            cache_full,
+        )
+        xc, new_cache = block(p, layer_kv, cache_i, xc)
+        cache_full = jax.tree.map(
+            lambda c, nc: jax.lax.dynamic_update_index_in_dim(c, nc, li, 0),
+            cache_full, new_cache,
+        )
+        return (xc, cache_full, li + 1), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, new_caches, _), _ = jax.lax.scan(
+        body, (x, caches, jnp.zeros((), jnp.int32)), (params["decoder"], kv)
+    )
+    return x, new_caches
+
+
+def forward(params, cfg, frame_embeds, tokens, *, remat=False):
+    """Training forward: encoder + teacher-forced decoder -> logits."""
+    x, aux = forward_hidden(params, cfg, frame_embeds, tokens, remat=remat)
+    return dense_apply(params["lm_head"], x), aux
+
+
+def forward_hidden(params, cfg, frame_embeds, tokens, *, remat=False):
+    """Final-normed decoder states (chunked fused CE entry point)."""
+    enc_out = encode(params, cfg, frame_embeds, remat=remat)
+    kv = cross_kv(params, cfg, enc_out)
+    x = embedding_apply(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x, _ = _dec_stack(params, cfg, x, positions, kv, None, remat=remat)
+    return rmsnorm_apply(params["final_norm"], x, cfg.norm_eps), jnp.zeros((), jnp.float32)
+
+
+def head_logits(params, cfg, x):
+    return dense_apply(params["lm_head"], x)
+
+
+def init_caches(cfg, batch, max_len, dtype=jnp.bfloat16):
+    def one():
+        return attn.gqa_cache_init(cfg, batch, max_len, dtype)
+
+    return jax.tree.map(
+        lambda *xs: jnp.stack(xs, axis=0), *[one() for _ in range(cfg.num_layers)]
+    )
+
+
+def prefill(params, cfg, frame_embeds, tokens, caches):
+    """Encode once + run the prompt through the decoder. Returns
+    (last_logits, caches, kv)."""
+    enc_out = encode(params, cfg, frame_embeds)
+    kv = cross_kv(params, cfg, enc_out)
+    x = embedding_apply(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x, caches = _dec_stack(params, cfg, x, positions, kv, caches)
+    x = rmsnorm_apply(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return dense_apply(params["lm_head"], x), caches, kv
+
+
+def decode_step(params, cfg, token, caches, kv):
+    x = embedding_apply(params["embed"], token)
+    pos = caches["len"][0]
+    positions = jnp.broadcast_to(pos, x.shape[:2])
+    x, caches = _dec_stack(params, cfg, x, positions, kv, caches)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return dense_apply(params["lm_head"], x), caches

@@ -1,0 +1,260 @@
+"""Foundational layers (pure-functional JAX).
+
+Every module follows the same convention:
+
+    params = <module>_init(key, cfg_or_dims, dtype=...)
+    y      = <module>_apply(params, x, ...)
+
+Params are plain dicts of ``jnp.ndarray`` so they compose into pytrees
+that pjit / checkpointing / compression handle uniformly.  Compute-heavy
+matmuls run in the params' dtype (bf16 in production) with f32 for
+normalization statistics and softmax, per DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def default_dtype():
+    return jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False,
+               scale: float | None = None):
+    if scale is None:
+        scale = 1.0 / (d_in ** 0.5)
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embedding_init(key, vocab: int, d: int, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embedding_apply(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def embedding_logits(p, x):
+    """Tied-softmax readout."""
+    return x @ p["table"].T
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def gated_mlp_init(key, d: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def gated_mlp_apply(p, x):
+    g = jax.nn.silu(dense_apply(p["w_gate"], x).astype(jnp.float32)).astype(x.dtype)
+    u = dense_apply(p["w_up"], x)
+    return dense_apply(p["w_down"], g * u)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+
+def causal_mask(q_len: int, kv_len: int, *, window: int = 0,
+                q_offset: int = 0) -> jnp.ndarray:
+    """Boolean mask (q_len, kv_len): True = attend.
+
+    ``q_offset`` is the absolute position of query 0 (decode: cache_len).
+    ``window`` > 0 enables sliding-window attention (mixtral SWA).
+    """
+    q_pos = jnp.arange(q_len) + q_offset
+    kv_pos = jnp.arange(kv_len)
+    mask = kv_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+    return mask
+
+
+def flash_attend(
+    q,
+    k,
+    v,
+    *,
+    q_offset=0,
+    window: int = 0,
+    bidirectional: bool = False,
+    scale: float | None = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    kv_len=None,
+):
+    """Memory-efficient attention: two-level scan with online softmax.
+
+    Never materializes the (S, T) logits — the tile working set is
+    (q_chunk x kv_chunk) — which is what makes train_4k and prefill_32k
+    lowerable at pod scale.  Same FLOPs as direct attention (untaken
+    causal tiles are still computed — a compile-shape trade documented in
+    EXPERIMENTS.md §Perf).
+
+    q: (B,S,H,D); k/v: (B,T,Hkv,Dv); GQA grouping handled internally.
+    ``q_offset``: absolute position of query 0 (decode/prefill resume).
+    ``kv_len``: dynamic count of valid kv positions (padded caches).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    dv = v.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+
+    def pick_chunk(n, target):
+        c = min(target, n)
+        while n % c:
+            c -= 1
+        return c
+
+    qc = pick_chunk(s, q_chunk)  # largest divisor <= target (4352 -> 272)
+    kc = pick_chunk(t, kv_chunk)
+    nq, nk = s // qc, t // kc
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, nq, qc, hkv, g, d)
+    kf = k.astype(jnp.float32).reshape(b, nk, kc, hkv, d)
+    vf = v.astype(jnp.float32).reshape(b, nk, kc, hkv, dv)
+
+    q_pos_base = jnp.arange(qc)
+    kv_pos_base = jnp.arange(kc)
+
+    def q_block(qi, q_tile):
+        q_pos = q_offset + qi * qc + q_pos_base  # (qc,)
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, k_tile, v_tile = inp
+            kv_pos = kj * kc + kv_pos_base  # (kc,)
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_tile, k_tile)
+            mask = jnp.ones((qc, kc), bool)
+            if not bidirectional:
+                mask &= kv_pos[None, :] <= q_pos[:, None]
+                if window:
+                    mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+            if kv_len is not None:
+                mask &= (kv_pos < kv_len)[None, :]
+            logits = jnp.where(mask[None, None, None, :, :], logits, -1e30)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v_tile
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, qc, dv), jnp.float32)
+        ks = jnp.moveaxis(kf, 1, 0)  # (nk, b, kc, hkv, d)
+        vs = jnp.moveaxis(vf, 1, 0)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (b,hkv,g,qc,dv)
+        return jnp.moveaxis(out, 3, 1)  # (b,qc,hkv,g,dv)
+
+    outs = jax.lax.map(
+        lambda args: q_block(*args),
+        (jnp.arange(nq), jnp.moveaxis(qf, 1, 0)),
+    )  # (nq, b, qc, hkv, g, dv)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dv)
+    return out.astype(q.dtype)
+
+
+def softmax_attend(q, k, v, mask, *, scale: float | None = None):
+    """q: (B,S,H,D)  k/v: (B,T,Hkv,D[v]) with H % Hkv == 0 (GQA).
+
+    f32 softmax; returns (B,S,H,Dv).
+    """
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, s, hkv, group, d)
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = jnp.where(mask[None, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, v.shape[-1]).astype(q.dtype)

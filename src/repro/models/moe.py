@@ -1,0 +1,111 @@
+"""Mixture-of-Experts FFN: top-k routing, shared experts, EP-shardable.
+
+Dispatch is the capacity-buffer formulation with scatter/gather (O(N*k*D)
+— NOT the textbook one-hot einsum, which is O(E*C*N) and infeasible at
+the 236B/1M-token scale of the dry-run):
+
+  1. router top-k -> (expert, position-in-buffer) per token choice,
+  2. scatter-add tokens into per-expert buffers (E, C, D),
+  3. run every expert as one batched einsum over the expert axis —
+     shardable along "model".  This IS the paper's AI-core assignment on
+     a TPU: the bottleneck operator (the MoE FFN holds ~98% of
+     deepseek-v2's weights) gets the accelerator axis,
+  4. gather outputs back to token order, weighted by the gates.
+
+Capacity drops overflow tokens (rare at capacity_factor 1.25); a
+Switch-style auxiliary loss keeps the router balanced.  A dropless
+gather/scatter variant needs data-dependent shapes, which the multi-pod
+dry-run can't lower — see DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import DP, MDL, hint
+from repro.models.layers import gated_mlp_init
+
+
+def moe_init(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    e = cfg.moe_experts
+    k_router, k_exp, k_shared = jax.random.split(key, 3)
+
+    def expert_init(k):
+        return gated_mlp_init(k, d, f, dtype)
+
+    p = {
+        "router": (jax.random.normal(k_router, (d, e), jnp.float32) * 0.02),
+        "experts": jax.vmap(expert_init)(jax.random.split(k_exp, e)),
+    }
+    if cfg.moe_shared_experts:
+        p["shared"] = jax.vmap(expert_init)(
+            jax.random.split(k_shared, cfg.moe_shared_experts)
+        )
+    return p
+
+
+def _expert_ffn(expert_params, x):
+    """x: (E, C, D) batched over experts; params leaves lead with E."""
+    g = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", x, expert_params["w_gate"]["w"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    u = jnp.einsum("ecd,edf->ecf", x, expert_params["w_up"]["w"])
+    return jnp.einsum("ecf,efd->ecd", g * u, expert_params["w_down"]["w"])
+
+
+def moe_apply(p, cfg, x, capacity: int | None = None):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    e, topk = cfg.moe_experts, cfg.moe_top_k
+    n = b * s
+    xt = x.reshape(n, d)
+
+    logits = xt.astype(jnp.float32) @ p["router"]  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, topk)  # (N, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    cap = capacity or int(max(1, round(cfg.moe_capacity_factor * n * topk / e)))
+
+    # position of each (token, choice) within its expert's buffer
+    onehot = jax.nn.one_hot(gate_idx.reshape(-1), e, dtype=jnp.int32)  # (N*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) - 1) * onehot  # (N*k, E)
+    pos_flat = jnp.sum(pos, axis=-1)  # (N*k,) position within chosen expert
+    exp_flat = gate_idx.reshape(-1)  # (N*k,)
+    keep = pos_flat < cap
+    pos_c = jnp.clip(pos_flat, 0, cap - 1)
+
+    # 2. scatter tokens into expert buffers (keep the expert axis on
+    # 'model' — scatter outputs otherwise default to replicated)
+    tok_flat = jnp.repeat(jnp.arange(n), topk)
+    src = hint(xt[tok_flat] * keep[:, None].astype(xt.dtype), DP, None)
+    buffers = jnp.zeros((e, cap, d), xt.dtype).at[exp_flat, pos_c].add(src)
+    buffers = hint(buffers, MDL, None, None)
+
+    # 3. expert compute, batched over the (sharded) expert axis
+    outputs = hint(_expert_ffn(p["experts"], buffers), MDL, None, None)
+
+    # 4. gather back in token order, gate-weighted
+    picked = hint(outputs[exp_flat, pos_c], DP, None)  # (N*k, D)
+    w = (gate_vals.reshape(-1) * keep.astype(jnp.float32)).astype(xt.dtype)
+    y = hint(
+        jnp.zeros((n, d), xt.dtype).at[tok_flat].add(picked * w[:, None]), DP, None
+    )
+
+    if "shared" in p:
+        n_sh = p["shared"]["w_gate"]["w"].shape[0]
+        sh = _expert_ffn(
+            p["shared"], jnp.broadcast_to(xt[None], (n_sh, n, d))
+        )
+        y = y + jnp.sum(sh, axis=0).astype(y.dtype)
+
+    # Switch-style load-balancing auxiliary loss
+    frac_tokens = jnp.sum(
+        jax.nn.one_hot(gate_idx, e, dtype=jnp.float32), axis=(0, 1)
+    ) / (n * topk)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    return y.reshape(b, s, d).astype(x.dtype), aux

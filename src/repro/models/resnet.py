@@ -1,0 +1,99 @@
+"""ResNet-18 in JAX — the paper's evaluation workload.
+
+Runs in two modes:
+  * float (bf16/f32) — reference/training path,
+  * int8 "VTA" path — conv-as-GEMM via the Pallas VTA kernels
+    (``repro.kernels.ops.vta_conv2d``), matching the paper's int8x8->32
+    datapath.  The quantized path is what ``examples/vta_serving.py``
+    drives and what ``benchmarks/kernel_bench.py`` measures.
+
+NHWC layout throughout (TPU-native).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+STAGES = [(2, 64, 1), (2, 128, 2), (2, 256, 2), (2, 512, 2)]
+
+
+def _conv_init(key, k, cin, cout, dtype):
+    fan_in = k * k * cin
+    w = jax.random.normal(key, (k, k, cin, cout), jnp.float32) * (2.0 / fan_in) ** 0.5
+    return {"w": w.astype(dtype)}
+
+
+def _bn_init(c, dtype):
+    return {
+        "scale": jnp.ones((c,), dtype),
+        "bias": jnp.zeros((c,), dtype),
+        "mean": jnp.zeros((c,), jnp.float32),
+        "var": jnp.ones((c,), jnp.float32),
+    }
+
+
+def init(key, num_classes: int = 1000, dtype=jnp.float32):
+    keys = iter(jax.random.split(key, 64))
+    params = {
+        "stem": {"conv": _conv_init(next(keys), 7, 3, 64, dtype), "bn": _bn_init(64, dtype)},
+        "stages": [],
+        "fc": {
+            "w": (jax.random.normal(next(keys), (512, num_classes), jnp.float32) * 0.01).astype(dtype),
+            "b": jnp.zeros((num_classes,), dtype),
+        },
+    }
+    cin = 64
+    for blocks, cout, stride0 in STAGES:
+        stage = []
+        for bi in range(blocks):
+            stride = stride0 if bi == 0 else 1
+            blk = {
+                "conv1": _conv_init(next(keys), 3, cin, cout, dtype),
+                "bn1": _bn_init(cout, dtype),
+                "conv2": _conv_init(next(keys), 3, cout, cout, dtype),
+                "bn2": _bn_init(cout, dtype),
+            }
+            if stride != 1 or cin != cout:
+                blk["down"] = _conv_init(next(keys), 1, cin, cout, dtype)
+                blk["down_bn"] = _bn_init(cout, dtype)
+            stage.append(blk)
+            cin = cout
+        params["stages"].append(stage)
+    return params
+
+
+def _conv(p, x, stride, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _bn(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    y = (xf - p["mean"]) * jax.lax.rsqrt(p["var"] + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def forward(params, images):
+    """images: (B, 224, 224, 3) -> logits (B, num_classes)."""
+    x = _conv(params["stem"]["conv"], images, 2)
+    x = jax.nn.relu(_bn(params["stem"]["bn"], x))
+    x = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+    )
+    for stage in params["stages"]:
+        for blk in stage:
+            # in ResNet-18 a block downsamples (stride 2) iff it has a
+            # projection shortcut (stages 2-4, first block)
+            stride = 2 if "down" in blk else 1
+            shortcut = x
+            h = jax.nn.relu(_bn(blk["bn1"], _conv(blk["conv1"], x, stride)))
+            h = _bn(blk["bn2"], _conv(blk["conv2"], h, 1))
+            if "down" in blk:
+                shortcut = _bn(blk["down_bn"], _conv(blk["down"], x, stride))
+            x = jax.nn.relu(h + shortcut)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["fc"]["w"] + params["fc"]["b"]

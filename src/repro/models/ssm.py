@@ -1,0 +1,226 @@
+"""Mamba2 — state-space duality (SSD) blocks.
+
+Training/prefill uses the chunked SSD dual form (arXiv:2405.21060): the
+sequence is cut into chunks; within a chunk the recurrence is evaluated
+as a masked attention-like matmul (MXU-friendly), and a tiny recurrent
+scan carries the (N x P) state across chunks.  Decode is the O(1)
+recurrence.  ``ssd_reference`` is the naive per-token recurrence used as
+the oracle in tests (and by the Pallas kernel's ref.py).
+
+Shapes: x (B, L, H, P), dt (B, L, H), B/C (B, L, N) shared across heads
+(single group), state (B, H, N, P).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_apply, dense_init, rmsnorm_apply, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_reference(x, dt, a_log, b, c, initial_state=None):
+    """Naive recurrence oracle.  Returns (y, final_state)."""
+    bsz, L, h, p = x.shape
+    n = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,)
+    state = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((bsz, h, n, p), jnp.float32)
+    )
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    def step(state, t):
+        decay = jnp.exp(a[None, :] * dtf[:, t])  # (B, H)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dtf[:, t], bf[:, t], xf[:, t])
+        state = state * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", cf[:, t], state)
+        return state, y
+
+    state, ys = jax.lax.scan(step, state, jnp.arange(L))
+    y = jnp.moveaxis(ys, 0, 1)  # (B, L, H, P)
+    return y.astype(x.dtype), state
+
+
+def _segsum(logdecay):
+    """logdecay: (..., Q) -> (..., Q, Q) lower-triangular segment sums:
+    out[i, j] = sum_{j < t <= i} logdecay[t], -inf above diagonal."""
+    q = logdecay.shape[-1]
+    cs = jnp.cumsum(logdecay, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum (j, i]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int = 128, initial_state=None):
+    """Chunked dual form.  Returns (y, final_state).  Matches
+    ``ssd_reference`` to fp tolerance (tests/test_ssm.py)."""
+    bsz, L, h, p = x.shape
+    n = b.shape[-1]
+    assert L % chunk == 0, f"seq {L} % chunk {chunk} != 0"
+    nck = L // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    xf = x.astype(jnp.float32).reshape(bsz, nck, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nck, chunk, h)
+    bf = b.astype(jnp.float32).reshape(bsz, nck, chunk, n)
+    cf = c.astype(jnp.float32).reshape(bsz, nck, chunk, n)
+
+    logdecay = a[None, None, None, :] * dtf  # (B, K, Q, H)
+    ld = jnp.moveaxis(logdecay, -1, 2)  # (B, K, H, Q)
+    cum = jnp.cumsum(ld, axis=-1)  # (B, K, H, Q)
+
+    # --- intra-chunk (diagonal) term: masked attention-like matmul
+    seg = _segsum(ld)  # (B, K, H, Q, Q)
+    decay_mat = jnp.exp(seg)
+    scores = jnp.einsum("bkin,bkjn->bkij", cf, bf)  # (B,K,Q,Q)
+    mat = scores[:, :, None] * decay_mat  # (B,K,H,Q,Q)
+    xdt = xf * dtf[..., None]  # (B,K,Q,H,P)
+    y_diag = jnp.einsum("bkhij,bkjhp->bkihp", mat, xdt)
+
+    # --- chunk states: decay-to-end weighted outer products
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)  # (B,K,H,Q)
+    s_chunk = jnp.einsum(
+        "bkhq,bkqn,bkqhp->bkhnp", decay_to_end, bf, xdt
+    )  # (B,K,H,N,P)
+
+    # --- inter-chunk recurrence over the K chunk axis
+    chunk_decay = jnp.exp(cum[..., -1])  # (B,K,H)
+    s0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((bsz, h, n, p), jnp.float32)
+    )
+
+    def carry(state, inp):
+        s_c, dec = inp  # (B,H,N,P), (B,H)
+        out_state = state
+        state = state * dec[:, :, None, None] + s_c
+        return state, out_state
+
+    s_seq = jnp.moveaxis(s_chunk, 1, 0)  # (K,B,H,N,P)
+    d_seq = jnp.moveaxis(chunk_decay, 1, 0)  # (K,B,H)
+    final_state, prev_states = jax.lax.scan(carry, s0, (s_seq, d_seq))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,K,H,N,P)
+
+    # --- inter-chunk (off-diagonal) contribution
+    in_decay = jnp.exp(cum)  # (B,K,H,Q) decay from chunk start to i
+    y_off = jnp.einsum("bkqn,bkhnp,bkhq->bkqhp", cf, prev_states, in_decay)
+
+    y = (y_diag + y_off).reshape(bsz, L, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x, dt, a_log, b, c):
+    """One-token recurrence.  x: (B,H,P), dt: (B,H), b/c: (B,N)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    decay = jnp.exp(a[None, :] * dtf)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dtf, b.astype(jnp.float32), xf)
+    state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", c.astype(jnp.float32), state)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (in_proj -> conv -> SSD -> gate -> out_proj)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    h = d_inner // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input projection: [z | x | B | C | dt]
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim), jnp.float32)
+                   * (1.0 / cfg.ssm_conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def _mamba2_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = d_inner // cfg.ssm_head_dim
+    return d_inner, h, cfg.ssm_state
+
+
+def _causal_depthwise_conv(w, bias, x, conv_state=None):
+    """x: (B, L, C); w: (W, C).  Returns (y, new_state (B, W-1, C))."""
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, L+W-1, C)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(width)
+    )
+    new_state = xp[:, -(width - 1):, :]
+    return jax.nn.silu((y + bias).astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def mamba2_cache_init(cfg, batch: int, dtype):
+    d_inner, h, n = _mamba2_dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "ssm": jnp.zeros((batch, h, n, cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_apply(p, cfg, x, cache=None, chunk: int = 128):
+    """x: (B, L, D) -> (y, new_cache).  cache=None => training (no state
+    out); L==1 with cache => decode step."""
+    bsz, L, d = x.shape
+    d_inner, h, n = _mamba2_dims(cfg)
+    proj = dense_apply(p["in_proj"], x)
+    z, xs, bmat, cmat, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1
+    )
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_depthwise_conv(p["conv_w"], p["conv_b"], conv_in, conv_state)
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    xh = xs.reshape(bsz, L, h, cfg.ssm_head_dim)
+
+    if cache is not None and L == 1:
+        y, new_state = ssd_decode_step(
+            cache["ssm"], xh[:, 0], dt[:, 0], p["a_log"], bmat[:, 0], cmat[:, 0]
+        )
+        y = y[:, None]
+    else:
+        init = cache["ssm"] if cache is not None else None
+        eff_chunk = min(chunk, L) if L % min(chunk, L) == 0 else 1
+        y, new_state = ssd_chunked(
+            xh, dt, p["a_log"], bmat, cmat, chunk=eff_chunk, initial_state=init
+        )
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, L, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rmsnorm_apply(p["out_norm"], y, cfg.norm_eps)
+    out = dense_apply(p["out_proj"], y)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"ssm": new_state, "conv": new_conv}
+    return out, new_cache

@@ -1,0 +1,117 @@
+"""Gradient compression with error feedback.
+
+For bandwidth-bound meshes (the paper's whole story is comm-bound
+scaling), compressing the gradient all-reduce trades a little fidelity
+for a lot of wire time.  Two schemes:
+
+* ``Int8Compressor`` — per-leaf symmetric int8 quantization (32x->8x of
+  f32), with error feedback: the quantization residual is carried to the
+  next step, so the *accumulated* gradient is unbiased (EF-SGD/EF21
+  style; without EF, int8 all-reduce stalls convergence).
+* ``TopKCompressor`` — magnitude top-k sparsification with EF.
+
+In the XLA data-parallel path the all-reduce itself is compiler-emitted,
+so compression is applied to the gradients around it (quantize ->
+dequantize); in the shard_map pipeline runtime the quantized payload
+crosses ``ppermute`` directly.  Bandwidth accounting for the roofline
+uses the compressed payload size either way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Compressor:
+    """grads -> (int8 payload, scale) -> grads, with error feedback."""
+
+    def init(self, params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def compress(self, grads, ef):
+        """Returns (payload pytree of {'q','scale'}, new_ef)."""
+
+        def one(g, e):
+            gf = g.astype(jnp.float32) + e
+            q, scale = _quant_int8(gf)
+            back = _dequant_int8(q, scale)
+            return {"q": q, "scale": scale, "ef": gf - back}
+
+        def is_rec(x):
+            return isinstance(x, dict) and set(x) == {"q", "scale", "ef"}
+
+        flat = jax.tree.map(one, grads, ef)
+        payload = jax.tree.map(
+            lambda r: {"q": r["q"], "scale": r["scale"]}, flat, is_leaf=is_rec
+        )
+        new_ef = jax.tree.map(lambda r: r["ef"], flat, is_leaf=is_rec)
+        return payload, new_ef
+
+    def decompress(self, payload):
+        def is_rec(x):
+            return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+        return jax.tree.map(
+            lambda r: _dequant_int8(r["q"], r["scale"]), payload, is_leaf=is_rec
+        )
+
+    def roundtrip(self, grads, ef):
+        """compress+decompress in one go (the XLA-allreduce usage)."""
+        payload, new_ef = self.compress(grads, ef)
+        return self.decompress(payload), new_ef
+
+    def apply(self, grads, state):
+        """train_step hook: state dict carries 'ef'."""
+        ef = state.get("ef")
+        if ef is None:
+            ef = self.init(grads)
+        new_grads, new_ef = self.roundtrip(grads, ef)
+        return new_grads, dict(state, ef=new_ef)
+
+    @staticmethod
+    def payload_bytes(params) -> int:
+        return sum(int(p.size) for p in jax.tree.leaves(params))  # 1B/elem
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor:
+    fraction: float = 0.01
+
+    def init(self, params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def apply(self, grads, state):
+        ef = state.get("ef")
+        if ef is None:
+            ef = self.init(grads)
+
+        def one(g, e):
+            gf = g.astype(jnp.float32) + e
+            flat = gf.reshape(-1)
+            k = max(1, int(flat.size * self.fraction))
+            vals, _ = jax.lax.top_k(jnp.abs(flat), k)
+            thresh = vals[-1]
+            kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0).reshape(gf.shape)
+            return {"g": kept, "ef": gf - kept}
+
+        def is_rec(x):
+            return isinstance(x, dict) and set(x) == {"g", "ef"}
+
+        out = jax.tree.map(one, grads, ef)
+        new_grads = jax.tree.map(lambda r: r["g"], out, is_leaf=is_rec)
+        new_ef = jax.tree.map(lambda r: r["ef"], out, is_leaf=is_rec)
+        return new_grads, dict(state, ef=new_ef)

@@ -1,0 +1,103 @@
+"""Serving steps: prefill + decode, batched requests.
+
+``serve_step`` is the unit the decode-shape dry-runs lower: ONE new token
+for every sequence in the batch against a KV cache of ``seq_len`` (the
+assigned ``decode_32k`` / ``long_500k`` cells).  Greedy sampling keeps
+the step closed (token in -> token out) so the graph is self-contained.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+
+
+def make_prefill_step(cfg, chunk: int = 4096):
+    """Chunked prefill (vLLM-style): prompts longer than ``chunk`` run as
+    sequential chunk passes against the growing KV cache.  Bounds the
+    attention/MoE working set at O(chunk) instead of O(prompt) — what
+    makes prefill_32k fit at 236B scale."""
+
+    def prefill_step(params, tokens, caches, embeds=None, frames=None):
+        s = tokens.shape[1]
+        if cfg.is_enc_dec:
+            if s <= chunk:
+                logits, caches, kv = encdec.prefill(params, cfg, frames, tokens, caches)
+            else:
+                assert s % chunk == 0, (s, chunk)
+                enc_out = encdec.encode(params, cfg, frames)
+                kv = encdec.cross_kv(params, cfg, enc_out)
+                for i in range(s // chunk):
+                    piece = jax.lax.dynamic_slice_in_dim(tokens, i * chunk, chunk, 1)
+                    x = jnp.arange(chunk)  # positions derive from cache len
+                    logits, caches = _encdec_chunk(params, cfg, piece, caches, kv)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return next_tok, caches, kv
+        if s <= chunk:
+            logits, caches = transformer.prefill(params, cfg, tokens, caches, embeds)
+        else:
+            assert s % chunk == 0, (s, chunk)
+            for i in range(s // chunk):
+                piece = jax.lax.dynamic_slice_in_dim(tokens, i * chunk, chunk, 1)
+                logits, caches = transformer.prefill(
+                    params, cfg, piece, caches, embeds if i == 0 else None
+                )
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return prefill_step
+
+
+def _encdec_chunk(params, cfg, piece, caches, kv):
+    """One decoder prefill chunk against precomputed cross K/V."""
+    from repro.models.layers import dense_apply, embedding_apply, rmsnorm_apply
+
+    x = embedding_apply(params["embed"], piece)
+    pos0 = caches["len"][0]
+    positions = pos0 + jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x, caches = encdec._dec_stack(params, cfg, x, positions, kv, caches)
+    x = rmsnorm_apply(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return dense_apply(params["lm_head"], x), caches
+
+
+def make_serve_step(cfg):
+    """One decode step: (params, token (B,1), caches[, kv]) -> (token, caches)."""
+    if cfg.is_enc_dec:
+        def serve_step(params, token, caches, kv):
+            logits, caches = encdec.decode_step(params, cfg, token, caches, kv)
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None], caches
+        return serve_step
+
+    def serve_step(params, token, caches):
+        logits, caches = transformer.decode_step(params, cfg, token, caches)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None], caches
+
+    return serve_step
+
+
+def generate(params, cfg, prompt, max_new: int, max_len: int, dtype=jnp.bfloat16,
+             frames=None, embeds=None):
+    """Simple greedy generation loop (examples/tests; not the dry-run)."""
+    b = prompt.shape[0]
+    caches = (
+        encdec.init_caches(cfg, b, max_len, dtype)
+        if cfg.is_enc_dec
+        else transformer.init_caches(cfg, b, max_len, dtype)
+    )
+    prefill = make_prefill_step(cfg)
+    step = make_serve_step(cfg)
+    kv = None
+    if cfg.is_enc_dec:
+        tok, caches, kv = prefill(params, prompt, caches, frames=frames)
+    else:
+        tok, caches = prefill(params, prompt, caches, embeds=embeds)
+    out = [tok[:, None]]
+    for _ in range(max_new - 1):
+        if cfg.is_enc_dec:
+            tok, caches = step(params, out[-1], caches, kv)
+        else:
+            tok, caches = step(params, out[-1], caches)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

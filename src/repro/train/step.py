@@ -1,0 +1,133 @@
+"""Training step: loss, remat, grad accumulation, AdamW.
+
+``make_train_step(cfg, opt_cfg)`` returns a pure ``train_step(state,
+batch) -> (state, metrics)`` suitable for ``jax.jit`` with explicit
+in/out shardings (see launch/dryrun.py and launch/train.py).
+
+Grad accumulation runs as a ``lax.scan`` over microbatches so arbitrary
+global batches fit; the accumulated grads are the carry (f32).  The
+backward is rematerialized per layer (scan-over-layers + jax.checkpoint
+in the model), the standard memory/compute trade at pod scale.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.optim import adamw
+
+
+def cross_entropy(logits, targets, mask=None):
+    """f32 token-mean CE.  logits (B,S,V), targets (B,S) int32."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_ce(head_fn, hidden, targets, chunk: int = 512):
+    """Fused chunked cross-entropy: logits are produced, consumed, and
+    (in backward) recomputed one sequence-chunk at a time, so the
+    (B, S, vocab) f32 tensor never exists.  ~5 GiB/device saved on the
+    150k-vocab archs at 4k context (EXPERIMENTS.md §Perf)."""
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    nc = s // c
+    h = hidden.reshape(b, nc, c, d)
+    t = targets.reshape(b, nc, c)
+
+    @jax.checkpoint
+    def piece(h_c, t_c):
+        logits = head_fn(h_c)  # (B, c, V)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, t_c[..., None], axis=-1)[..., 0]
+        return jnp.sum(ll)
+
+    def body(acc, i):
+        return acc + piece(h[:, i], t[:, i]), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), jnp.arange(nc))
+    return -total / (b * s)
+
+
+def make_loss_fn(cfg, aux_weight: float = 0.01, remat: bool = True):
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        if cfg.is_enc_dec:
+            hidden, aux = encdec.forward_hidden(
+                params, cfg, batch["frames"], tokens[:, :-1], remat=remat
+            )
+            ce = chunked_ce(
+                lambda h: encdec.head_logits(params, cfg, h), hidden, tokens[:, 1:]
+            )
+        else:
+            embeds = batch.get("embeds")
+            hidden, aux = transformer.forward_hidden(
+                params, cfg, tokens[:, :-1], embeds, remat=remat
+            )
+            # modality prefix tokens (if any) don't predict text targets
+            front = hidden.shape[1] - (tokens.shape[1] - 1)
+            hidden = hidden[:, front:]
+            ce = chunked_ce(
+                lambda h: transformer.head_logits(params, cfg, h), hidden, tokens[:, 1:]
+            )
+        loss = ce + aux_weight * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def init_state(key, cfg, dtype=jnp.bfloat16, moments_dtype=jnp.float32):
+    model = encdec if cfg.is_enc_dec else transformer
+    params = model.init(key, cfg, dtype)
+    return {"params": params, "opt": adamw.init(params, moments_dtype),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, *, grad_accum: int = 1,
+                    aux_weight: float = 0.01, remat: bool = True,
+                    compress=None):
+    """``compress``: optional repro.optim.compress.Compressor applied to
+    the (already mean-reduced) grads before the optimizer — gradient
+    compression with error feedback for bandwidth-bound meshes."""
+    loss_fn = make_loss_fn(cfg, aux_weight, remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if grad_accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                acc = carry
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / grad_accum, acc, g
+                )
+                return acc, (l, m)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            mbs = jax.tree.map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum, *x.shape[1:]),
+                batch,
+            )
+            grads, (losses, ms) = jax.lax.scan(micro, zeros, mbs)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, ms)
+
+        if compress is not None:
+            grads, state = compress.apply(grads, state)
+
+        new_params, opt, opt_metrics = adamw.apply(opt_cfg, params, grads, state["opt"])
+        new_state = dict(state, params=new_params, opt=opt, step=state["step"] + 1)
+        return new_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step

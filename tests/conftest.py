@@ -1,0 +1,9 @@
+import os
+
+# smoke tests and benches must see the single real CPU device — the
+# 512-device override belongs ONLY to repro.launch.dryrun
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

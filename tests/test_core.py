@@ -1,0 +1,172 @@
+"""Graph IR, strategies, scheduler, and simulator behaviour."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import GBE, ULTRASCALE, ZYNQ7020
+from repro.core.graph import Graph, Op, resnet18_graph, transformer_graph
+from repro.core.scheduler import auto_schedule, predict, rebalance
+from repro.core.simulator import graph_service_time, simulate
+from repro.core.strategies import STRATEGIES, make_plan
+
+
+@pytest.fixture(scope="module")
+def g():
+    return resnet18_graph()
+
+
+class TestGraph:
+    def test_resnet18_macs(self, g):
+        # ResNet-18 @224 is ~1.8 GMACs
+        assert 1.6e9 < g.total_macs < 2.0e9
+
+    def test_resnet18_params(self, g):
+        # ~11.7M params, int8
+        assert 10e6 < g.total_param_bytes < 13e6
+
+    def test_topological(self, g):
+        seen = set()
+        for op in g:
+            assert all(d in seen for d in op.deps)
+            seen.add(op.name)
+
+    def test_json_roundtrip(self, g):
+        g2 = Graph.from_json(g.to_json())
+        assert [o.name for o in g2] == [o.name for o in g]
+        assert g2.total_macs == g.total_macs
+
+    def test_bottlenecks_sorted(self, g):
+        b = g.bottlenecks(5)
+        assert all(b[i].macs >= b[i + 1].macs for i in range(4))
+
+    @given(st.integers(min_value=1, max_value=16))
+    @settings(max_examples=10, deadline=None)
+    def test_cut_segments_partition(self, k):
+        graph = resnet18_graph()
+        segs = graph.cut_segments(k)
+        flat = [op.name for seg in segs for op in seg]
+        assert flat == [op.name for op in graph.ops]  # exact cover, in order
+        assert 1 <= len(segs) <= k
+
+    def test_cut_balance(self, g):
+        segs = g.cut_segments(4)
+        costs = g.segment_macs(segs)
+        assert max(costs) < 0.6 * g.total_macs  # no degenerate giant stage
+
+    def test_transformer_graph(self):
+        tg = transformer_graph(
+            "t", num_layers=4, d_model=64, num_heads=4, kv_heads=2,
+            d_ff=128, vocab=1000, seq_len=128,
+        )
+        assert len(tg) == 4 * 2 + 2
+        assert tg.total_macs > 0
+
+    def test_moe_graph_bottleneck(self):
+        tg = transformer_graph(
+            "m", num_layers=2, d_model=64, num_heads=4, kv_heads=4,
+            d_ff=256, vocab=1000, seq_len=128, moe_experts=8, moe_top_k=2,
+        )
+        assert tg.bottlenecks(1)[0].kind in ("moe_ffn", "dense")
+
+
+class TestStrategies:
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    @pytest.mark.parametrize("n", [1, 2, 5, 12])
+    def test_plans_validate(self, g, strategy, n):
+        plan = make_plan(g, strategy, n)
+        plan.validate(g)  # raises on inconsistency
+
+    @given(st.sampled_from(STRATEGIES), st.integers(min_value=1, max_value=12))
+    @settings(max_examples=20, deadline=None)
+    def test_all_ops_assigned(self, strategy, n):
+        graph = resnet18_graph()
+        plan = make_plan(graph, strategy, n)
+        assert set(plan.assignment) == {op.name for op in graph.ops}
+        for op in graph.ops:
+            k = plan.way_split(op)
+            assert 1 <= k <= max(op.divisible, 1)
+
+    def test_fused_widths_proportional(self, g):
+        plan = make_plan(g, "fused", 12)
+        widths = [len(s.nodes) for s in plan.stages]
+        assert sum(widths) == 12
+        assert all(w >= 1 for w in widths)
+
+
+class TestSimulator:
+    def test_single_node_anchor(self, g):
+        # calibrated to the paper's 27.34 ms within 10%
+        r = simulate(g, make_plan(g, "scatter_gather", 1), ZYNQ7020)
+        assert abs(r.avg_ms_per_image - 27.34) / 27.34 < 0.10
+
+    def test_ultrascale_anchor(self, g):
+        r = simulate(g, make_plan(g, "scatter_gather", 1), ULTRASCALE)
+        assert abs(r.avg_ms_per_image - 25.15) / 25.15 < 0.10
+
+    def test_scatter_gather_scales(self, g):
+        t1 = simulate(g, make_plan(g, "scatter_gather", 1), ZYNQ7020).avg_ms_per_image
+        t12 = simulate(g, make_plan(g, "scatter_gather", 12), ZYNQ7020).avg_ms_per_image
+        assert t12 < t1 / 8  # near-linear
+
+    def test_ai_core_small_n_penalty(self, g):
+        """The paper's key observation: AI-core assignment is WORSE than
+        a single node at N=2 (network overhead), best at N=12."""
+        t1 = simulate(g, make_plan(g, "ai_core_assignment", 1), ZYNQ7020).avg_ms_per_image
+        t2 = simulate(g, make_plan(g, "ai_core_assignment", 2), ZYNQ7020).avg_ms_per_image
+        t12 = simulate(g, make_plan(g, "ai_core_assignment", 12), ZYNQ7020).avg_ms_per_image
+        assert t2 > t1  # worse than single node
+        assert t12 < t1 / 5
+
+    def test_crossover(self, g):
+        """Scatter-gather beats AI-core at small N; AI-core wins at 12
+        (Fig. 3 crossover around N=7..9)."""
+        sg3 = simulate(g, make_plan(g, "scatter_gather", 3), ZYNQ7020).avg_ms_per_image
+        ai3 = simulate(g, make_plan(g, "ai_core_assignment", 3), ZYNQ7020).avg_ms_per_image
+        assert sg3 < ai3
+        sg12 = simulate(g, make_plan(g, "scatter_gather", 12), ZYNQ7020).avg_ms_per_image
+        ai12 = simulate(g, make_plan(g, "ai_core_assignment", 12), ZYNQ7020).avg_ms_per_image
+        assert ai12 < sg12 * 1.25  # competitive-or-better at full cluster
+
+    def test_energy_accounting(self, g):
+        r = simulate(g, make_plan(g, "scatter_gather", 4), ZYNQ7020)
+        # 4 boards at 2.2-4.6 W for ~7ms/image -> tens of mJ, < 0.2 J
+        assert 0.0 < r.energy_j_per_image < 0.2
+
+    def test_straggler_hurts(self, g):
+        plan = make_plan(g, "pipeline", 4)
+        base = simulate(g, plan, ZYNQ7020).avg_ms_per_image
+        slow = simulate(g, plan, ZYNQ7020, slowdown={1: 3.0}).avg_ms_per_image
+        assert slow > base * 1.3
+
+    def test_rebalance_helps_pipeline(self, g):
+        plan = make_plan(g, "pipeline", 4)
+        rates = {0: 1.0, 1: 0.33, 2: 1.0, 3: 1.0}
+        slow = simulate(g, plan, ZYNQ7020, slowdown={1: 3.0}).avg_ms_per_image
+        re = rebalance(g, plan, rates)
+        # rebalanced: the slow node gets the lightest stage
+        slow2 = simulate(g, re, ZYNQ7020, slowdown={1: 3.0}).avg_ms_per_image
+        assert slow2 <= slow * 1.05
+
+
+class TestScheduler:
+    def test_auto_schedule_picks_best(self, g):
+        choice = auto_schedule(g, 4, ZYNQ7020)
+        assert choice.plan.strategy in STRATEGIES
+        assert choice.result.avg_ms_per_image == min(choice.alternatives.values())
+
+    def test_predict_is_finite(self, g):
+        for s in STRATEGIES:
+            assert 0 < predict(g, s, 6, ZYNQ7020) < 1.0
+
+    def test_reconfigurability_story(self, g):
+        """The winner flips with cluster size — the reason the cluster is
+        reconfigurable at all."""
+        small = auto_schedule(g, 2, ZYNQ7020, strategies=("scatter_gather", "ai_core_assignment"))
+        big = auto_schedule(g, 12, ZYNQ7020, strategies=("scatter_gather", "ai_core_assignment"))
+        assert small.plan.strategy == "scatter_gather"
+        # at N=2 AI-core is FAR worse; by N=12 it has closed the gap
+        # completely (paper: it wins outright from N~7)
+        gap2 = small.alternatives["ai_core_assignment"] / small.alternatives["scatter_gather"]
+        gap12 = big.alternatives["ai_core_assignment"] / big.alternatives["scatter_gather"]
+        assert gap2 > 2.0
+        assert gap12 < 1.05

@@ -1,0 +1,123 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), with
+shape/dtype sweeps and hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.vta_gemm import vmem_footprint_bytes
+
+I = dict(interpret=True)
+
+
+def _rand_int8(key, shape):
+    return jax.random.randint(key, shape, -128, 128, jnp.int8)
+
+
+class TestGEMM:
+    @pytest.mark.parametrize("m,k,n", [
+        (16, 16, 16),        # VTA native block
+        (128, 128, 128),     # one MXU tile
+        (100, 200, 300),     # unaligned (exercises padding)
+        (1, 2048, 512),      # decode-like skinny GEMM
+        (384, 64, 640),
+    ])
+    def test_matmul_shapes(self, m, k, n):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(m * n))
+        a, w = _rand_int8(k1, (m, k)), _rand_int8(k2, (k, n))
+        np.testing.assert_array_equal(
+            np.asarray(ops.matmul_int8(a, w, **I)), np.asarray(ref.gemm_ref(a, w))
+        )
+
+    @pytest.mark.parametrize("preset", list(ops.BLOCK_PRESETS))
+    def test_presets(self, preset):
+        """Table I and the §IV big-block reconfiguration both compute the
+        same GEMM — reconfigurability changes performance, not results."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        a, w = _rand_int8(k1, (256, 512)), _rand_int8(k2, (512, 256))
+        np.testing.assert_array_equal(
+            np.asarray(ops.matmul_int8(a, w, preset=preset, **I)),
+            np.asarray(ref.gemm_ref(a, w)),
+        )
+
+    @given(
+        m=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_matmul_property(self, m, k, n, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        a, w = _rand_int8(k1, (m, k)), _rand_int8(k2, (k, n))
+        got = ops.matmul_int8(a, w, block_m=32, block_n=32, block_k=32, **I)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.gemm_ref(a, w)))
+
+    @pytest.mark.parametrize("shift,relu", [(0, False), (6, True), (10, True)])
+    def test_requant_epilogue(self, shift, relu):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+        a, w = _rand_int8(k1, (64, 96)), _rand_int8(k2, (96, 160))
+        bias = jax.random.randint(k3, (160,), -(2**10), 2**10, jnp.int32)
+        got = ops.dense_requant_int8(a, w, bias, shift=shift, relu=relu, **I)
+        want = ref.gemm_requant_ref(a, w, bias, shift, relu)
+        assert got.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_dequant_epilogue(self):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+        a, w = _rand_int8(k1, (130, 70)), _rand_int8(k2, (70, 129))
+        scale = jax.random.uniform(k3, (129,), jnp.float32, 1e-3, 1e-1)
+        np.testing.assert_allclose(
+            np.asarray(ops.dense_int8(a, w, scale, **I)),
+            np.asarray(ref.gemm_dequant_ref(a, w, scale)),
+            rtol=1e-6,
+        )
+
+    def test_vmem_budget(self):
+        """Every preset's working set fits the 16 MiB VMEM twice over
+        (double buffering) — the BlockSpec analogue of Table I's SRAM."""
+        for preset, blocks in ops.BLOCK_PRESETS.items():
+            assert vmem_footprint_bytes(**blocks) < 8 * 2**20, preset
+
+
+class TestALU:
+    @pytest.mark.parametrize("op,kw", [
+        ("add", {}), ("max", {}), ("min", {}),
+        ("relu", {}), ("shr", {"shift": 7}), ("add_imm", {"imm": -3}),
+        ("max_imm", {"imm": 11}),
+    ])
+    def test_ops(self, op, kw):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+        x = jax.random.randint(k1, (100, 64), -(2**20), 2**20, jnp.int32)
+        y = jax.random.randint(k2, (100, 64), -(2**20), 2**20, jnp.int32)
+        binary = op in ("add", "max", "min")
+        got = ops.alu(x, y if binary else None, op=op, **kw, **I)
+        want = ref.alu_ref(x, y if binary else None, op,
+                           kw.get("imm", 0), kw.get("shift", 0))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestConv:
+    @pytest.mark.parametrize("hw,cin,cout,kk,stride", [
+        (8, 3, 16, 3, 1),
+        (16, 8, 8, 3, 2),
+        (14, 16, 32, 1, 1),
+        (7, 4, 8, 7, 2),  # resnet stem-like
+    ])
+    def test_conv_as_gemm(self, hw, cin, cout, kk, stride):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(hw * cin))
+        x = _rand_int8(k1, (2, hw, hw, cin))
+        w = _rand_int8(k2, (kk, kk, cin, cout))
+        got = ops.vta_conv2d(x, w, stride=stride, **I)
+        want = ref.conv2d_ref(x, w, stride=stride)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_quantize_roundtrip(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (32, 32))
+        q = ops.quantize(x, 0.05)
+        assert q.dtype == jnp.int8
+        np.testing.assert_allclose(
+            np.asarray(q.astype(jnp.float32) * 0.05), np.asarray(x),
+            atol=0.05 * 0.51 + 1e-6,
+        )

@@ -1,0 +1,209 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + layer oracles.
+
+Every assigned arch instantiates a REDUCED config of its own family and
+runs one forward + one train step, asserting output shapes and finite
+values — per the task spec.  Full configs are exercised only via the
+dry-run.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models import encdec, resnet, transformer as tf
+from repro.models.layers import (
+    apply_rope, causal_mask, flash_attend, softmax_attend,
+)
+from repro.models.ssm import ssd_chunked, ssd_reference
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import init_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _small_batch(cfg, b=2, s=32):
+    batch = {"tokens": jax.random.randint(KEY, (b, s + 1), 0, cfg.vocab)}
+    if cfg.frontend == "vision":
+        batch["embeds"] = jax.random.normal(KEY, (b, 4, cfg.d_model), jnp.float32)
+    if cfg.is_enc_dec:
+        batch["frames"] = jax.random.normal(KEY, (b, 16, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).scaled_down()
+    state = init_state(KEY, cfg, jnp.float32)
+    batch = _small_batch(cfg)
+    step = make_train_step(cfg, AdamWConfig(lr=1e-3), remat=False)
+    new_state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(new_state["step"]) == 1
+    # params actually moved
+    delta = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        state["params"], new_state["params"],
+    )
+    assert max(jax.tree.leaves(delta)) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3_0p6b", "mixtral_8x22b", "deepseek_v2_236b",
+                                  "mamba2_2p7b", "zamba2_2p7b"])
+def test_serve_consistency(arch):
+    """prefill(full) == prefill(prefix) + decode_step(last) — both on the
+    dropless serving path."""
+    cfg = get_config(arch).scaled_down()
+    params = tf.init(KEY, cfg, jnp.float32)
+    T = 16
+    tokens = jax.random.randint(KEY, (2, T), 0, cfg.vocab)
+    c1 = tf.init_caches(cfg, 2, 64, jnp.float32)
+    full_last, _ = tf.prefill(params, cfg, tokens, c1)
+    c2 = tf.init_caches(cfg, 2, 64, jnp.float32)
+    _, c2 = tf.prefill(params, cfg, tokens[:, : T - 1], c2)
+    step_logits, _ = tf.decode_step(params, cfg, tokens[:, T - 1 :], c2)
+    np.testing.assert_allclose(
+        np.asarray(step_logits), np.asarray(full_last), atol=2e-4, rtol=1e-3
+    )
+
+
+def test_encdec_serve_consistency():
+    cfg = get_config("seamless_m4t_large_v2").scaled_down()
+    params = encdec.init(KEY, cfg, jnp.float32)
+    frames = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.float32)
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg.vocab)
+    c1 = encdec.init_caches(cfg, 2, 64, jnp.float32)
+    full, _, _ = encdec.prefill(params, cfg, frames, toks, c1)
+    c2 = encdec.init_caches(cfg, 2, 64, jnp.float32)
+    _, c2, kv = encdec.prefill(params, cfg, frames, toks[:, :11], c2)
+    step, _ = encdec.decode_step(params, cfg, toks[:, 11:], c2, kv)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full), atol=2e-4, rtol=1e-3)
+
+
+def test_swa_rolling_decode_matches_full_window():
+    """Mixtral rolling-buffer decode == full attention when the context
+    fits inside the window."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("mixtral_8x22b").scaled_down(),
+                              sliding_window=64)
+    params = tf.init(KEY, cfg, jnp.float32)
+    T = 20
+    tokens = jax.random.randint(KEY, (1, T), 0, cfg.vocab)
+    caches = tf.init_caches(cfg, 1, 64, jnp.float32)  # buffer = window
+    _, caches = tf.prefill(params, cfg, tokens[:, : T - 1], caches)
+    got, _ = tf.decode_step(params, cfg, tokens[:, T - 1 :], caches)
+    c2 = tf.init_caches(cfg, 1, 64, jnp.float32)
+    want, _ = tf.prefill(params, cfg, tokens, c2)  # serve path, full seq
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=2e-4, rtol=1e-3
+    )
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("window,bidir", [(0, False), (96, False), (0, True)])
+    def test_matches_direct(self, window, bidir):
+        b, s, h, hkv, d = 2, 512, 8, 4, 16
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, s, h, d))
+        k = jax.random.normal(ks[1], (b, s, hkv, d))
+        v = jax.random.normal(ks[2], (b, s, hkv, d))
+        mask = jnp.ones((s, s), bool) if bidir else causal_mask(s, s, window=window)
+        want = softmax_attend(q, k, v, mask)
+        got = flash_attend(q, k, v, window=window, bidirectional=bidir,
+                           q_chunk=128, kv_chunk=64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    @given(st.integers(1, 4), st.integers(0, 64))
+    @settings(max_examples=8, deadline=None)
+    def test_offset_kvlen_property(self, b, extra):
+        s, t, h, d = 64, 256, 4, 8
+        ks = jax.random.split(jax.random.PRNGKey(b * 131 + extra), 3)
+        q = jax.random.normal(ks[0], (b, s, h, d))
+        k = jax.random.normal(ks[1], (b, t, h, d))
+        v = jax.random.normal(ks[2], (b, t, h, d))
+        off, kv_len = 100, 100 + s + extra
+        kv_pos, q_pos = jnp.arange(t), jnp.arange(s) + off
+        mask = (kv_pos[None] <= q_pos[:, None]) & (kv_pos < kv_len)[None]
+        want = softmax_attend(q, k, v, mask)
+        got = flash_attend(q, k, v, q_offset=off, kv_len=kv_len,
+                           q_chunk=32, kv_chunk=64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    def test_grad_matches(self):
+        b, s, h, d = 1, 256, 2, 8
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, s, h, d))
+        k = jax.random.normal(ks[1], (b, s, h, d))
+        v = jax.random.normal(ks[2], (b, s, h, d))
+        f1 = lambda q, k, v: jnp.sum(
+            flash_attend(q, k, v, q_chunk=64, kv_chunk=64) ** 2
+        )
+        f2 = lambda q, k, v: jnp.sum(
+            softmax_attend(q, k, v, causal_mask(s, s)) ** 2
+        )
+        g1, g2 = jax.grad(f1, (0, 1, 2))(q, k, v), jax.grad(f2, (0, 1, 2))(q, k, v)
+        for a, b_ in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=5e-4)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("L,chunk", [(64, 16), (128, 32), (96, 96)])
+    def test_chunked_matches_reference(self, L, chunk):
+        b, h, p, n = 2, 4, 8, 16
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (b, L, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, h)))
+        a_log = jax.random.normal(ks[2], (h,)) * 0.3
+        bmat = jax.random.normal(ks[3], (b, L, n)) * 0.3
+        cmat = jax.random.normal(ks[4], (b, L, n)) * 0.3
+        y_ref, s_ref = ssd_reference(x, dt, a_log, bmat, cmat)
+        y, s = ssd_chunked(x, dt, a_log, bmat, cmat, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), atol=1e-3, rtol=1e-3)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def test_state_carry_property(self, seed):
+        """Processing [first half] then [second half with carried state]
+        == processing the whole sequence (the prefill-resume invariant)."""
+        b, L, h, p, n = 1, 64, 2, 4, 8
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        x = jax.random.normal(ks[0], (b, L, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, h)))
+        a_log = jax.random.normal(ks[2], (h,)) * 0.3
+        bmat = jax.random.normal(ks[3], (b, L, n)) * 0.3
+        cmat = jax.random.normal(ks[4], (b, L, n)) * 0.3
+        y_all, s_all = ssd_chunked(x, dt, a_log, bmat, cmat, chunk=16)
+        half = L // 2
+        y1, s1 = ssd_chunked(x[:, :half], dt[:, :half], a_log,
+                             bmat[:, :half], cmat[:, :half], chunk=16)
+        y2, s2 = ssd_chunked(x[:, half:], dt[:, half:], a_log,
+                             bmat[:, half:], cmat[:, half:], chunk=16,
+                             initial_state=s1)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                                   np.asarray(y_all), atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(s2), np.asarray(s_all),
+                                   atol=1e-3, rtol=1e-3)
+
+
+def test_rope_relative_shift():
+    """RoPE logits depend only on relative positions."""
+    d, h = 16, 2
+    ks = jax.random.split(KEY, 2)
+    q = jax.random.normal(ks[0], (1, 4, h, d))
+    k = jax.random.normal(ks[1], (1, 4, h, d))
+    p1 = jnp.arange(4)[None, :]
+    p2 = p1 + 100
+    l1 = jnp.einsum("bshd,bthd->bhst", apply_rope(q, p1, 1e4), apply_rope(k, p1, 1e4))
+    l2 = jnp.einsum("bshd,bthd->bhst", apply_rope(q, p2, 1e4), apply_rope(k, p2, 1e4))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-4)
+
+
+def test_resnet18_forward():
+    p = resnet.init(KEY, 10)
+    out = resnet.forward(p, jax.random.normal(KEY, (2, 64, 64, 3)))
+    assert out.shape == (2, 10)
+    assert bool(jnp.all(jnp.isfinite(out)))
