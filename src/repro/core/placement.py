@@ -1,13 +1,15 @@
 """ClusterPlan -> JAX runtime translation.
 
 The bridge between the paper-faithful planner (repro.core.strategies)
-and the TPU runtime (repro.dist):
+and the executable runtime layer: ``repro.dist.sharding`` (the
+PartitionSpec engine behind every launcher) and ``repro.dist.pipeline``
+(the GPipe shard_map schedule):
 
   scatter_gather      -> pure-DP shardings (params replicated)
   ai_core_assignment  -> TP/EP shardings (model axis on bottleneck ops)
   fused               -> FSDP x TP 2D shardings (the dry-run default)
   pipeline            -> stage count + microbatches for
-                         repro.dist.pipeline
+                         repro.dist.pipeline.make_pipeline_forward
 
 so ``auto_schedule`` decisions made against the cost model translate
 directly into launcher configuration.
@@ -40,7 +42,9 @@ def to_placement(plan: ClusterPlan, mesh: Mesh, num_microbatches: int = 8) -> Pl
     if plan.strategy == "pipeline":
         return Placement(
             strategy="pipeline",
-            sharding_strategy="fused",  # stage-internal params stay 2D
+            # blocks stage-sharded on the layer axis (matches the
+            # shard_map in_specs of repro.dist.pipeline), embed/head 2D
+            sharding_strategy="pipeline",
             pipeline_stages=mesh.shape.get("model", 1),
             num_microbatches=num_microbatches,
         )

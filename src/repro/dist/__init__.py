@@ -1,0 +1,15 @@
+"""JAX runtime for the paper's cluster plans.
+
+``repro.core.strategies`` decides *how* to spread a workload over the
+cluster (scatter-gather DP, AI-core operator assignment, pipeline,
+fused); this package makes those decisions executable:
+
+  sharding  — PartitionSpec engine: strategy -> per-leaf shardings,
+              activation hints, spec repair against an actual mesh
+  pipeline  — GPipe-style shard_map pipeline over the ``model`` axis
+
+Submodules are imported directly (``from repro.dist.sharding import
+hint``) rather than re-exported here: ``pipeline`` depends on
+``repro.models``, which itself imports ``repro.dist.sharding``, and an
+eager re-export would turn that layering into an import cycle.
+"""

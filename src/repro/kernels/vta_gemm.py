@@ -30,6 +30,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed TPUCompilerParams -> CompilerParams across jax releases
+def _compiler_params(**kwargs):
+    cls = getattr(pltpu, "CompilerParams",
+                  getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        raise AttributeError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams; this jax release renamed the pallas "
+            "compiler-params API again"
+        )
+    return cls(**kwargs)
+
 
 def _gemm_kernel(a_ref, w_ref, out_ref, acc_ref, *, n_k: int):
     """Tiled int8 GEMM with int32 VMEM accumulator."""
@@ -136,7 +148,7 @@ def vta_gemm(
         grid=grid,
         scratch_shapes=[acc],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
     )

@@ -196,6 +196,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, strategy: str = "fu
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per computation
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     rec = {
         "arch": arch,

@@ -1,7 +1,6 @@
 """Graph IR, strategies, scheduler, and simulator behaviour."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.cost_model import GBE, ULTRASCALE, ZYNQ7020
 from repro.core.graph import Graph, Op, resnet18_graph, transformer_graph
@@ -39,14 +38,20 @@ class TestGraph:
         b = g.bottlenecks(5)
         assert all(b[i].macs >= b[i + 1].macs for i in range(4))
 
-    @given(st.integers(min_value=1, max_value=16))
-    @settings(max_examples=10, deadline=None)
-    def test_cut_segments_partition(self, k):
-        graph = resnet18_graph()
-        segs = graph.cut_segments(k)
-        flat = [op.name for seg in segs for op in seg]
-        assert flat == [op.name for op in graph.ops]  # exact cover, in order
-        assert 1 <= len(segs) <= k
+    def test_cut_segments_partition(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=10, deadline=None)
+        @given(st.integers(min_value=1, max_value=16))
+        def check(k):
+            graph = resnet18_graph()
+            segs = graph.cut_segments(k)
+            flat = [op.name for seg in segs for op in seg]
+            assert flat == [op.name for op in graph.ops]  # exact cover, in order
+            assert 1 <= len(segs) <= k
+
+        check()
 
     def test_cut_balance(self, g):
         segs = g.cut_segments(4)
@@ -76,15 +81,21 @@ class TestStrategies:
         plan = make_plan(g, strategy, n)
         plan.validate(g)  # raises on inconsistency
 
-    @given(st.sampled_from(STRATEGIES), st.integers(min_value=1, max_value=12))
-    @settings(max_examples=20, deadline=None)
-    def test_all_ops_assigned(self, strategy, n):
-        graph = resnet18_graph()
-        plan = make_plan(graph, strategy, n)
-        assert set(plan.assignment) == {op.name for op in graph.ops}
-        for op in graph.ops:
-            k = plan.way_split(op)
-            assert 1 <= k <= max(op.divisible, 1)
+    def test_all_ops_assigned(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=20, deadline=None)
+        @given(st.sampled_from(STRATEGIES), st.integers(min_value=1, max_value=12))
+        def check(strategy, n):
+            graph = resnet18_graph()
+            plan = make_plan(graph, strategy, n)
+            assert set(plan.assignment) == {op.name for op in graph.ops}
+            for op in graph.ops:
+                k = plan.way_split(op)
+                assert 1 <= k <= max(op.divisible, 1)
+
+        check()
 
     def test_fused_widths_proportional(self, g):
         plan = make_plan(g, "fused", 12)

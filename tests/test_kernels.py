@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.vta_gemm import vmem_footprint_bytes
@@ -43,16 +42,23 @@ class TestGEMM:
             np.asarray(ref.gemm_ref(a, w)),
         )
 
-    @given(
-        m=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64),
-        seed=st.integers(0, 2**31 - 1),
-    )
-    @settings(max_examples=12, deadline=None)
-    def test_matmul_property(self, m, k, n, seed):
-        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
-        a, w = _rand_int8(k1, (m, k)), _rand_int8(k2, (k, n))
-        got = ops.matmul_int8(a, w, block_m=32, block_n=32, block_k=32, **I)
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.gemm_ref(a, w)))
+    def test_matmul_property(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=12, deadline=None)
+        @given(
+            m=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64),
+            seed=st.integers(0, 2**31 - 1),
+        )
+        def check(m, k, n, seed):
+            k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+            a, w = _rand_int8(k1, (m, k)), _rand_int8(k2, (k, n))
+            got = ops.matmul_int8(a, w, block_m=32, block_n=32, block_k=32, **I)
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(ref.gemm_ref(a, w)))
+
+        check()
 
     @pytest.mark.parametrize("shift,relu", [(0, False), (6, True), (10, True)])
     def test_requant_epilogue(self, shift, relu):

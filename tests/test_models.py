@@ -10,7 +10,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import ARCH_IDS, get_config
 from repro.models import encdec, resnet, transformer as tf
@@ -116,21 +115,28 @@ class TestFlashAttention:
                            q_chunk=128, kv_chunk=64)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
 
-    @given(st.integers(1, 4), st.integers(0, 64))
-    @settings(max_examples=8, deadline=None)
-    def test_offset_kvlen_property(self, b, extra):
-        s, t, h, d = 64, 256, 4, 8
-        ks = jax.random.split(jax.random.PRNGKey(b * 131 + extra), 3)
-        q = jax.random.normal(ks[0], (b, s, h, d))
-        k = jax.random.normal(ks[1], (b, t, h, d))
-        v = jax.random.normal(ks[2], (b, t, h, d))
-        off, kv_len = 100, 100 + s + extra
-        kv_pos, q_pos = jnp.arange(t), jnp.arange(s) + off
-        mask = (kv_pos[None] <= q_pos[:, None]) & (kv_pos < kv_len)[None]
-        want = softmax_attend(q, k, v, mask)
-        got = flash_attend(q, k, v, q_offset=off, kv_len=kv_len,
-                           q_chunk=32, kv_chunk=64)
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+    def test_offset_kvlen_property(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=8, deadline=None)
+        @given(st.integers(1, 4), st.integers(0, 64))
+        def check(b, extra):
+            s, t, h, d = 64, 256, 4, 8
+            ks = jax.random.split(jax.random.PRNGKey(b * 131 + extra), 3)
+            q = jax.random.normal(ks[0], (b, s, h, d))
+            k = jax.random.normal(ks[1], (b, t, h, d))
+            v = jax.random.normal(ks[2], (b, t, h, d))
+            off, kv_len = 100, 100 + s + extra
+            kv_pos, q_pos = jnp.arange(t), jnp.arange(s) + off
+            mask = (kv_pos[None] <= q_pos[:, None]) & (kv_pos < kv_len)[None]
+            want = softmax_attend(q, k, v, mask)
+            got = flash_attend(q, k, v, q_offset=off, kv_len=kv_len,
+                               q_chunk=32, kv_chunk=64)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=2e-5)
+
+        check()
 
     def test_grad_matches(self):
         b, s, h, d = 1, 256, 2, 8
@@ -164,29 +170,35 @@ class TestSSD:
         np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-3, rtol=1e-3)
         np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), atol=1e-3, rtol=1e-3)
 
-    @given(st.integers(0, 2**31 - 1))
-    @settings(max_examples=8, deadline=None)
-    def test_state_carry_property(self, seed):
+    def test_state_carry_property(self):
         """Processing [first half] then [second half with carried state]
         == processing the whole sequence (the prefill-resume invariant)."""
-        b, L, h, p, n = 1, 64, 2, 4, 8
-        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
-        x = jax.random.normal(ks[0], (b, L, h, p))
-        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, h)))
-        a_log = jax.random.normal(ks[2], (h,)) * 0.3
-        bmat = jax.random.normal(ks[3], (b, L, n)) * 0.3
-        cmat = jax.random.normal(ks[4], (b, L, n)) * 0.3
-        y_all, s_all = ssd_chunked(x, dt, a_log, bmat, cmat, chunk=16)
-        half = L // 2
-        y1, s1 = ssd_chunked(x[:, :half], dt[:, :half], a_log,
-                             bmat[:, :half], cmat[:, :half], chunk=16)
-        y2, s2 = ssd_chunked(x[:, half:], dt[:, half:], a_log,
-                             bmat[:, half:], cmat[:, half:], chunk=16,
-                             initial_state=s1)
-        np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
-                                   np.asarray(y_all), atol=1e-3, rtol=1e-3)
-        np.testing.assert_allclose(np.asarray(s2), np.asarray(s_all),
-                                   atol=1e-3, rtol=1e-3)
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=8, deadline=None)
+        @given(st.integers(0, 2**31 - 1))
+        def check(seed):
+            b, L, h, p, n = 1, 64, 2, 4, 8
+            ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+            x = jax.random.normal(ks[0], (b, L, h, p))
+            dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, h)))
+            a_log = jax.random.normal(ks[2], (h,)) * 0.3
+            bmat = jax.random.normal(ks[3], (b, L, n)) * 0.3
+            cmat = jax.random.normal(ks[4], (b, L, n)) * 0.3
+            y_all, s_all = ssd_chunked(x, dt, a_log, bmat, cmat, chunk=16)
+            half = L // 2
+            y1, s1 = ssd_chunked(x[:, :half], dt[:, :half], a_log,
+                                 bmat[:, :half], cmat[:, :half], chunk=16)
+            y2, s2 = ssd_chunked(x[:, half:], dt[:, half:], a_log,
+                                 bmat[:, half:], cmat[:, half:], chunk=16,
+                                 initial_state=s1)
+            np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                                       np.asarray(y_all), atol=1e-3, rtol=1e-3)
+            np.testing.assert_allclose(np.asarray(s2), np.asarray(s_all),
+                                       atol=1e-3, rtol=1e-3)
+
+        check()
 
 
 def test_rope_relative_shift():
