@@ -1,0 +1,117 @@
+"""Pallas attention kernel microbenchmarks (prefill + decode sweeps).
+
+Like ``kernel_bench``, interpret-mode wall-clock measures Python-level
+kernel-body execution (CPU), NOT TPU performance — so the derived column
+reports the *structural* quantities that transfer to hardware:
+
+* prefill: achieved vs. dense KV-tile counts (the causal / SWA / ragged
+  block-skip — the FLOP fraction the kernel actually runs) and the
+  MAC/B arithmetic intensity of the executed tiles;
+* decode: live vs. total split-KV partitions at each cache-fill level —
+  the O(kv_len) vs O(max_len) cost model of the serving step.
+
+The shape grid follows Table I's spirit: one small config per regime
+(square causal prefill, sliding window, ragged chunked-prefill resume,
+decode at increasing cache fill), kept interpreter-friendly.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import (
+    decode_attention,
+    decode_partition_counts,
+)
+from repro.kernels.flash_attention import flash_attention, flash_tile_counts
+
+# (name, s, t, window, bidirectional, q_offset, kv_len)
+PREFILL_GRID = [
+    ("causal_512", 512, 512, 0, False, 0, None),
+    ("causal_1k", 1024, 1024, 0, False, 0, None),
+    ("swa_1k_w256", 1024, 1024, 256, False, 0, None),
+    ("resume_256_of_1k", 256, 1024, 0, False, 512, 768),
+]
+
+# (name, max_len, kv_len)
+DECODE_GRID = [
+    ("decode_4k_fill256", 4096, 256),
+    ("decode_4k_fill1k", 4096, 1024),
+    ("decode_4k_full", 4096, 4096),
+]
+
+B, H, HKV, D = 1, 8, 4, 64
+BLOCK_Q = BLOCK_K = 128
+DECODE_BLOCK_K = 512
+
+
+def _time(fn, reps=2):
+    fn().block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def _prefill_intensity(executed, s, t, dtype_bytes=4):
+    """MACs per byte over the tiles actually executed (per b, kv-head)."""
+    g = H // HKV
+    macs = executed * BLOCK_Q * BLOCK_K * g * 2 * D  # QK^T + PV
+    io = (s * g * D + 2 * t * D + s * g * D) * dtype_bytes
+    return macs / io
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    results = []
+
+    for name, s, t, window, bidir, q_off, kv_len in PREFILL_GRID:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, s, H, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, t, HKV, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, t, HKV, D), jnp.float32)
+        fn = jax.jit(lambda q=q, k=k, v=v: flash_attention(
+            q, k, v, window=window, bidirectional=bidir, q_offset=q_off,
+            kv_len=kv_len, block_q=BLOCK_Q, block_k=BLOCK_K, interpret=True))
+        dt = _time(fn)
+        exe, tot = flash_tile_counts(
+            s, t, block_q=BLOCK_Q, block_k=BLOCK_K, q_offset=q_off,
+            window=window, bidirectional=bidir, kv_len=kv_len)
+        intensity = _prefill_intensity(exe, s, t)
+        print(f"flash_prefill[{name}] S={s} T={t}: {dt*1e3:.1f} ms/call "
+              f"(interpret), tiles {exe}/{tot} "
+              f"({100*(1-exe/tot):.0f}% skipped), {intensity:.0f} MAC/B")
+        results.append((
+            f"attn_prefill_{name}", dt * 1e6,
+            f"tiles={exe}/{tot};skip_pct={100*(1-exe/tot):.0f};"
+            f"intensity={intensity:.0f}"))
+
+    for name, max_len, kv_len in DECODE_GRID:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, 1, H, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, max_len, HKV, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, max_len, HKV, D), jnp.float32)
+        fn = jax.jit(lambda q=q, k=k, v=v: decode_attention(
+            q, k, v, kv_len=kv_len, block_k=DECODE_BLOCK_K, interpret=True))
+        dt = _time(fn)
+        exe, tot = decode_partition_counts(max_len, kv_len,
+                                           block_k=DECODE_BLOCK_K)
+        print(f"flash_decode[{name}] max_len={max_len} kv_len={kv_len}: "
+              f"{dt*1e3:.1f} ms/call (interpret), partitions {exe}/{tot} "
+              f"(cost ~O(kv_len))")
+        results.append((
+            f"attn_{name}", dt * 1e6,
+            f"partitions={exe}/{tot};kv_len={kv_len};max_len={max_len}"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, der in results:
+        print(f"{name},{us:.1f},{der}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,23 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
 ``PYTHONPATH=src python -m benchmarks.run``  prints a CSV summary
-(``name,us_per_call,derived``) after each module's detailed output.
+(``name,us_per_call,derived``) after each module's detailed output and
+writes the same rows machine-readably to ``BENCH_kernels.json`` so CI
+can archive the per-PR perf trajectory.
+
+``--only mod1,mod2`` restricts to a subset (CI smoke runs
+``--only kernel_bench,attn_bench``).
 """
 
 from __future__ import annotations
 
+import argparse
 import io
+import json
 import sys
 import traceback
+
+BENCH_JSON = "BENCH_kernels.json"
 
 
 def _capture(mod_main):
@@ -31,8 +40,29 @@ def _capture(mod_main):
     return rows
 
 
-def main() -> None:
+def _write_json(csv_rows: list[str], path: str = BENCH_JSON) -> None:
+    records = []
+    for row in csv_rows:
+        name, us, derived = row.split(",", 2)
+        try:
+            us_val: float | None = float(us)
+        except ValueError:
+            us_val = None
+        records.append({"name": name, "us_per_call": us_val, "derived": derived})
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"\nwrote {len(records)} rows to {path}")
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(prog="benchmarks.run")
+    parser.add_argument(
+        "--only", default="",
+        help="comma-separated module subset (e.g. kernel_bench,attn_bench)")
+    args = parser.parse_args(argv)
+
     from benchmarks import (
+        attn_bench,
         discussion_reconfig,
         fig3_zynq_cluster,
         fig4_ultrascale_cluster,
@@ -47,6 +77,7 @@ def main() -> None:
         ("fig4_ultrascale_cluster", fig4_ultrascale_cluster.main),
         ("discussion_reconfig", discussion_reconfig.main),
         ("kernel_bench", kernel_bench.main),
+        ("attn_bench", attn_bench.main),
         ("strategy_tpu", strategy_tpu.main),
         ("power", power.main),
     ]
@@ -55,6 +86,13 @@ def main() -> None:
     if os.path.exists("dryrun_results.jsonl"):
         from benchmarks import roofline
         modules.append(("roofline", roofline.main))
+
+    if args.only:
+        wanted = {m.strip() for m in args.only.split(",") if m.strip()}
+        unknown = wanted - {name for name, _ in modules}
+        if unknown:
+            raise SystemExit(f"unknown benchmark modules: {sorted(unknown)}")
+        modules = [(name, fn) for name, fn in modules if name in wanted]
 
     failed = []
     for name, fn in modules:
@@ -68,6 +106,7 @@ def main() -> None:
     print(f"\n{'='*72}\n== SUMMARY (name,us_per_call,derived)\n{'='*72}")
     for row in csv_rows:
         print(row)
+    _write_json(csv_rows)
     if failed:
         print(f"\nFAILED modules: {failed}")
         raise SystemExit(1)

@@ -1,3 +1,23 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas compute kernels for the hot operators.
+
+* ``vta_gemm`` / ``vta_alu`` / ``ops`` — the paper's VTA int8 GEMM core
+  and ALU epilogues (Table I block presets).
+* ``flash_attention`` — causal flash prefill with block-level tile
+  skipping (GQA/SWA/MLA, chunked-prefill resume).
+* ``decode_attention`` — flash-decoding split-KV kernel for S=1 serve
+  steps over padded caches (O(kv_len) per step).
+
+The jnp oracles live in ``ref.py`` / ``repro.models.layers``; model code
+reaches these kernels through the ``flash_attend`` / ``decode_attend``
+dispatchers in ``repro.models.layers``, never directly.
+"""
+
+from repro.kernels.decode_attention import decode_attention, decode_partition_counts
+from repro.kernels.flash_attention import flash_attention, flash_tile_counts
+
+__all__ = [
+    "decode_attention",
+    "decode_partition_counts",
+    "flash_attention",
+    "flash_tile_counts",
+]

@@ -1,0 +1,194 @@
+"""Flash-decoding style split-KV attention for single-token decode.
+
+``serve_step`` decodes ONE token per sequence against a padded KV cache
+of ``max_len`` slots, of which only ``kv_len`` are live.  The jnp path
+(`softmax_attend` over the full buffer) therefore pays O(max_len) per
+step: a decode_32k cell with 100 generated tokens still attends 32k
+padded slots.  This kernel makes the step cost track the cache fill:
+
+* the padded cache is **partitioned along KV** into ``block_k`` slices
+  (one grid step each) — the flash-decoding split that turns a skinny
+  (G, T) attention into P independent (G, block_k) panels;
+* partitions at/after ``kv_len`` are skipped under ``pl.when`` and their
+  DMA is clamped onto the last live partition by the scalar-prefetched
+  index map, so a fresh cache costs ~1 partition, a full one costs P —
+  O(kv_len), not O(max_len);
+* each live partition emits an unnormalized partial output plus its
+  online-softmax statistics (m, l); the cross-partition **max /
+  logsumexp combine** runs as cheap jnp on (B, Hkv, P, G) arrays.
+
+Layout mirrors ``flash_attention``: q folds the GQA group into rows,
+(B, Hkv, G, D) against (B, Hkv, Tp, D) K/V panels, f32 statistics.
+A per-partition execution counter backs the accounting tests and the
+``attn_bench`` achieved-vs-skipped report.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention import MASK_VALUE, _pad_axis
+from repro.kernels.vta_gemm import _compiler_params
+
+DEFAULT_BLOCK_K = 512
+
+
+def _decode_kernel(
+    sref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *refs,
+    kc, window, scale, with_counts,
+):
+    cnt_ref = refs[0] if with_counts else None
+    ip = pl.program_id(2)
+    kvlen = sref[0]
+    k_lo = ip * kc
+    q_pos = kvlen - 1  # the decoded token is the newest cache entry
+
+    executed = k_lo < kvlen
+    if window > 0:
+        executed &= (k_lo + kc - 1) > (q_pos - window)
+    if with_counts:
+        cnt_ref[...] = jnp.broadcast_to(
+            executed.astype(jnp.int32), cnt_ref.shape)
+
+    @pl.when(executed)
+    def _partition():
+        q = q_ref[...].reshape(q_ref.shape[-2], q_ref.shape[-1])  # (G, D)
+        k = k_ref[...].reshape(kc, k_ref.shape[-1])
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (G, kc)
+
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = cols < kvlen
+        if window > 0:
+            mask &= cols > q_pos - window
+        s = jnp.where(mask, s, MASK_VALUE)
+
+        m = jnp.max(s, axis=1, keepdims=True)  # (G, 1)
+        p = jnp.exp(s - m)
+        o_ref[...] = jax.lax.dot(
+            p.astype(v_ref.dtype), v_ref[...].reshape(kc, v_ref.shape[-1]),
+            preferred_element_type=jnp.float32,
+        ).reshape(o_ref.shape)
+        m_ref[...] = m.reshape(m_ref.shape)
+        l_ref[...] = jnp.sum(p, axis=1, keepdims=True).reshape(l_ref.shape)
+
+    @pl.when(jnp.logical_not(executed))
+    def _dead():
+        # neutral statistics: alpha = exp(-inf - m_glob) = 0 in the combine
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+
+def decode_attention(
+    q, k, v, *,
+    kv_len,
+    window: int = 0,
+    scale: float | None = None,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+    return_counts: bool = False,
+):
+    """Split-KV decode attention.
+
+    q: (B, 1, H, D) — the single new token's queries;
+    k/v: (B, T, Hkv, D[v]) — the padded cache AFTER the new K/V were
+    written, so the query's absolute position is ``kv_len - 1``.
+    ``kv_len`` may be a traced scalar.  Returns (B, 1, H, Dv)
+    [+ (B, Hkv, P) partition execution map when ``return_counts``].
+    """
+    b, s, h, d = q.shape
+    assert s == 1, f"decode_attention is an S=1 kernel, got S={s}"
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    dv = v.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    kc = min(block_k, t)
+
+    q3 = q.reshape(b, hkv, g, d)
+    k4 = _pad_axis(k.transpose(0, 2, 1, 3), 2, kc)
+    v4 = _pad_axis(v.transpose(0, 2, 1, 3), 2, kc)
+    tp = k4.shape[2]
+    np_ = tp // kc
+
+    kvlen = jnp.minimum(jnp.asarray(kv_len, jnp.int32), t)
+    scalars = kvlen[None] if kvlen.ndim == 0 else kvlen.reshape(1)
+
+    def kv_index(ib, ih, ip, sref):
+        # dead partitions re-present the last live tile: no wasted DMA
+        live_last = jnp.maximum((sref[0] - 1) // kc, 0)
+        return ib, ih, jnp.clip(jnp.minimum(ip, live_last), 0, np_ - 1), 0
+
+    out_specs = [
+        pl.BlockSpec((1, 1, 1, g, dv), lambda ib, ih, ip, s: (ib, ih, ip, 0, 0)),
+        pl.BlockSpec((1, 1, 1, g), lambda ib, ih, ip, s: (ib, ih, ip, 0)),
+        pl.BlockSpec((1, 1, 1, g), lambda ib, ih, ip, s: (ib, ih, ip, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, hkv, np_, g, dv), jnp.float32),
+        jax.ShapeDtypeStruct((b, hkv, np_, g), jnp.float32),
+        jax.ShapeDtypeStruct((b, hkv, np_, g), jnp.float32),
+    ]
+    if return_counts:
+        out_specs.append(pl.BlockSpec((1, 1, 1), lambda ib, ih, ip, s: (ib, ih, ip)))
+        out_shape.append(jax.ShapeDtypeStruct((b, hkv, np_), jnp.int32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, np_),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ip, s: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, kc, d), kv_index),
+            pl.BlockSpec((1, 1, kc, dv), kv_index),
+        ],
+        out_specs=out_specs,
+    )
+    res = pl.pallas_call(
+        functools.partial(_decode_kernel, kc=kc, window=window, scale=scale,
+                          with_counts=return_counts),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(scalars, q3, k4, v4)
+    o_part, m_part, l_part = res[:3]
+
+    # max / logsumexp combine across partitions (cheap: (B,Hkv,P,G))
+    m_glob = jnp.max(m_part, axis=2, keepdims=True)
+    # dead partitions carry m = -inf; exp(-inf - finite) = 0 kills them
+    alpha = jnp.exp(m_part - jnp.maximum(m_glob, MASK_VALUE))
+    den = jnp.sum(alpha * l_part, axis=2)  # (B, Hkv, G)
+    num = jnp.sum(alpha[..., None] * o_part, axis=2)  # (B, Hkv, G, Dv)
+    out = num / jnp.maximum(den, 1e-30)[..., None]
+    out = out.reshape(b, 1, h, dv).astype(q.dtype)
+    if return_counts:
+        return out, res[3]
+    return out
+
+
+def decode_partition_counts(t: int, kv_len: int, *,
+                            block_k: int = DEFAULT_BLOCK_K,
+                            window: int = 0):
+    """Analytic (executed, total) partition counts for one (batch,
+    kv-head) decode step — the split-KV analogue of
+    ``flash_tile_counts``."""
+    kc = min(block_k, t)
+    np_ = -(-t // kc)
+    kvlen = min(kv_len, t)
+    executed = 0
+    for ip in range(np_):
+        k_lo = ip * kc
+        live = k_lo < kvlen
+        if window > 0:
+            live = live and (k_lo + kc - 1) > (kvlen - 1 - window)
+        executed += int(live)
+    return executed, np_

@@ -26,6 +26,7 @@ from repro.dist.sharding import DP, MDL, hint
 from repro.models.layers import (
     apply_rope,
     causal_mask,
+    decode_attend,
     dense_apply,
     dense_init,
     flash_attend,
@@ -120,7 +121,11 @@ def gqa_apply(p, cfg, x, positions, cache=None, *, bidirectional=False):
             ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, cur, 0, 0))
             cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, cur, 0, 0))
             new_len = cur + s
-            if s >= FLASH_MIN_SEQ:
+            if s == 1:
+                # decode: split-KV kernel, O(kv_len) not O(max_len)
+                out = decode_attend(q, ck, cv, kv_len=new_len,
+                                    window=cfg.sliding_window)
+            elif s >= FLASH_MIN_SEQ:
                 out = flash_attend(q, ck, cv, q_offset=cur,
                                    window=cfg.sliding_window, kv_len=new_len)
             else:
@@ -212,7 +217,8 @@ def _mla_attend(p, cfg, q_nope, q_rope, ckv, k_rope, mask=None, *,
         )
         q = hint(q, DP, None, MDL, None)
         k = hint(k, DP, None, MDL, None)
-        out = flash_attend(q, k, v, q_offset=q_offset, kv_len=kv_len, scale=scale)
+        out = flash_attend(q, k, v, q_offset=q_offset, kv_len=kv_len,
+                           scale=scale)
         return out.reshape(b, s, h * dv)
 
     logits = jnp.einsum("bshd,bthd->bhst", q_nope.astype(jnp.float32),
@@ -224,6 +230,29 @@ def _mla_attend(p, cfg, q_nope, q_rope, ckv, k_rope, mask=None, *,
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
     return out.reshape(b, s, h * dv).astype(q_nope.dtype)
+
+
+def _mla_attend_absorbed(p, cfg, q_nope, q_rope, ckv, k_rope, *, kv_len):
+    """Decode (S=1) MLA via weight absorption: because
+    ``k_nope[t,h] = Wuk[:,h]^T c_kv[t]``, the nope logits equal
+    ``(Wuk q_nope) . c_kv`` — so the step attends directly in the
+    compressed latent space (keys ``[c_kv | k_rope]``, values ``c_kv``,
+    one shared KV head) and only the single attended latent goes through
+    ``Wuv``.  The padded cache is never up-projected: per-step cost is
+    the split-KV kernel's O(kv_len) plus O(h·r·(dn+dv)) for one token."""
+    b, s, h, dn = q_nope.shape
+    r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    dv = cfg.mla_v_head_dim
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope,
+                       p["wuk"]["w"].reshape(r, h, dn))
+    q = jnp.concatenate([q_lat, q_rope], axis=-1)  # (B, 1, H, r+dr)
+    q = hint(q, DP, None, MDL, None)
+    k = jnp.concatenate([ckv, k_rope], axis=-1)[:, :, None, :]  # 1 kv head
+    out_lat = decode_attend(q, k, ckv[:, :, None, :], kv_len=kv_len,
+                            scale=(dn + dr) ** -0.5)  # (B, 1, H, r)
+    out = jnp.einsum("bshr,rhd->bshd", out_lat,
+                     p["wuv"]["w"].reshape(r, h, dv))
+    return out.reshape(b, s, h * dv)
 
 
 def mla_apply(p, cfg, x, positions, cache=None):
@@ -239,7 +268,11 @@ def mla_apply(p, cfg, x, positions, cache=None):
         cc = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, cur, 0))
         cr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope, (0, cur, 0))
         new_len = cur + s
-        if s >= FLASH_MIN_SEQ:
+        if s == 1:
+            # decode: weight-absorbed split-KV over the compressed cache
+            out = _mla_attend_absorbed(p, cfg, q_nope, q_rope, cc, cr,
+                                       kv_len=new_len)
+        elif s >= FLASH_MIN_SEQ:
             out = _mla_attend(p, cfg, q_nope, q_rope, cc, cr,
                               q_offset=cur, kv_len=new_len)
         else:
@@ -279,6 +312,9 @@ def cross_attn_apply(p, cfg, x, kv):
     b, s, _ = x.shape
     q = dense_apply(p["wq"], x).reshape(b, s, cfg.num_heads, cfg.head_dim)
     t = kv["k"].shape[1]
-    mask = jnp.ones((s, t), bool)
-    out = softmax_attend(q, kv["k"], kv["v"], mask)
+    # bidirectional: no (S, T) mask to build in either branch
+    if s >= FLASH_MIN_SEQ or t >= FLASH_MIN_SEQ:
+        out = flash_attend(q, kv["k"], kv["v"], bidirectional=True)
+    else:
+        out = softmax_attend(q, kv["k"], kv["v"])
     return dense_apply(p["wo"], out.reshape(b, s, -1))

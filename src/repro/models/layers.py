@@ -14,6 +14,7 @@ normalization statistics and softmax, per DESIGN.md §7.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +22,44 @@ import jax.numpy as jnp
 
 def default_dtype():
     return jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# attention implementation dispatch
+# ---------------------------------------------------------------------------
+
+# Which backend the `flash_attend` / `decode_attend` hot paths run on:
+#   "auto"   — Pallas kernels on TPU, jnp reference elsewhere (default)
+#   "pallas" — force the Pallas kernels (interpret mode off-TPU; this is
+#              how the CPU equivalence tests and benchmarks drive them)
+#   "jnp"    — force the pure-jnp reference paths
+# Seeded from $REPRO_ATTN_IMPL; switchable at runtime (re-jit applies it).
+_ATTN_IMPL = os.environ.get("REPRO_ATTN_IMPL", "auto")
+_ATTN_IMPLS = ("auto", "pallas", "jnp")
+
+
+def set_attention_impl(impl: str) -> str:
+    """Select the attention backend; returns the previous setting."""
+    global _ATTN_IMPL
+    if impl not in _ATTN_IMPLS:
+        raise ValueError(f"impl must be one of {_ATTN_IMPLS}, got {impl!r}")
+    prev, _ATTN_IMPL = _ATTN_IMPL, impl
+    return prev
+
+
+def attention_impl() -> str:
+    return _ATTN_IMPL
+
+
+def _pallas_attention() -> bool:
+    if _ATTN_IMPL == "pallas":
+        return True
+    return _ATTN_IMPL == "auto" and jax.default_backend() == "tpu"
+
+
+def _pallas_interpret() -> bool:
+    # off-TPU the kernels run in the Pallas interpreter (test/CI path)
+    return jax.default_backend() != "tpu"
 
 
 # ---------------------------------------------------------------------------
@@ -161,17 +200,54 @@ def flash_attend(
     kv_chunk: int = 1024,
     kv_len=None,
 ):
-    """Memory-efficient attention: two-level scan with online softmax.
+    """Tiled online-softmax attention — never materializes (S, T) logits.
 
-    Never materializes the (S, T) logits — the tile working set is
-    (q_chunk x kv_chunk) — which is what makes train_4k and prefill_32k
-    lowerable at pod scale.  Same FLOPs as direct attention (untaken
-    causal tiles are still computed — a compile-shape trade documented in
-    EXPERIMENTS.md §Perf).
+    Dispatcher: on TPU (or when forced via ``set_attention_impl`` /
+    $REPRO_ATTN_IMPL) this lowers to the Pallas flash kernel, whose
+    block-level causal/window masking *skips* fully-masked KV tiles
+    (~2x prefill FLOPs saved, EXPERIMENTS.md §Perf); elsewhere it runs
+    ``flash_attend_ref``, the two-level jnp scan, identical interface.
 
     q: (B,S,H,D); k/v: (B,T,Hkv,Dv); GQA grouping handled internally.
     ``q_offset``: absolute position of query 0 (decode/prefill resume).
     ``kv_len``: dynamic count of valid kv positions (padded caches).
+    """
+    if _pallas_attention():
+        from repro.kernels.flash_attention import flash_attention
+
+        return flash_attention(
+            q, k, v, q_offset=q_offset, window=window,
+            bidirectional=bidirectional, scale=scale, kv_len=kv_len,
+            block_q=min(q_chunk, 128), block_k=min(kv_chunk, 128),
+            interpret=_pallas_interpret(),
+        )
+    return flash_attend_ref(
+        q, k, v, q_offset=q_offset, window=window,
+        bidirectional=bidirectional, scale=scale, q_chunk=q_chunk,
+        kv_chunk=kv_chunk, kv_len=kv_len,
+    )
+
+
+def flash_attend_ref(
+    q,
+    k,
+    v,
+    *,
+    q_offset=0,
+    window: int = 0,
+    bidirectional: bool = False,
+    scale: float | None = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    kv_len=None,
+):
+    """jnp reference: two-level scan with online softmax.
+
+    The tile working set is (q_chunk x kv_chunk) — what makes train_4k
+    and prefill_32k lowerable at pod scale on any backend.  Same FLOPs
+    as direct attention (untaken causal tiles are still computed — the
+    rectangular-scan trade the Pallas kernel removes).  Also serves as
+    the Pallas kernel's backward-pass recompute target.
     """
     b, s, h, d = q.shape
     t = k.shape[1]
@@ -242,10 +318,11 @@ def flash_attend(
     return out.astype(q.dtype)
 
 
-def softmax_attend(q, k, v, mask, *, scale: float | None = None):
+def softmax_attend(q, k, v, mask=None, *, scale: float | None = None):
     """q: (B,S,H,D)  k/v: (B,T,Hkv,D[v]) with H % Hkv == 0 (GQA).
 
-    f32 softmax; returns (B,S,H,Dv).
+    ``mask``: (S, T) boolean, True = attend; None = full attention
+    (no (S, T) allocation).  f32 softmax; returns (B,S,H,Dv).
     """
     b, s, h, d = q.shape
     hkv = k.shape[2]
@@ -254,7 +331,29 @@ def softmax_attend(q, k, v, mask, *, scale: float | None = None):
     scale = scale if scale is not None else d ** -0.5
     logits = jnp.einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
-    logits = jnp.where(mask[None, None, None, :, :], logits, -1e30)
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None, :, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(jnp.float32))
     return out.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
+
+
+def decode_attend(q, k, v, *, kv_len, window: int = 0,
+                  scale: float | None = None):
+    """Single-token decode attention over a padded KV cache.
+
+    q: (B,1,H,D); k/v: (B,T,Hkv,D[v]) with the new token's K/V already
+    written, so the query's absolute position is ``kv_len - 1`` (traced).
+    Dispatcher twin of ``flash_attend``: the Pallas split-KV kernel costs
+    O(kv_len) per step; the jnp fallback masks the full O(T) buffer.
+    """
+    if _pallas_attention():
+        from repro.kernels.decode_attention import decode_attention
+
+        return decode_attention(
+            q, k, v, kv_len=kv_len, window=window, scale=scale,
+            interpret=_pallas_interpret(),
+        )
+    # q_pos = kv_len - 1, so "<= q_pos" doubles as the kv_len clamp
+    mask = causal_mask(1, k.shape[1], window=window, q_offset=kv_len - 1)
+    return softmax_attend(q, k, v, mask, scale=scale)

@@ -31,8 +31,9 @@ def make_prefill_step(cfg, chunk: int = 4096):
                 kv = encdec.cross_kv(params, cfg, enc_out)
                 for i in range(s // chunk):
                     piece = jax.lax.dynamic_slice_in_dim(tokens, i * chunk, chunk, 1)
-                    x = jnp.arange(chunk)  # positions derive from cache len
-                    logits, caches = _encdec_chunk(params, cfg, piece, caches, kv)
+                    last_h, caches = _encdec_chunk(params, cfg, piece, caches, kv)
+                # the LM head only matters after the final chunk
+                logits = _encdec_head(params, cfg, last_h)
             next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             return next_tok, caches, kv
         if s <= chunk:
@@ -51,15 +52,23 @@ def make_prefill_step(cfg, chunk: int = 4096):
 
 
 def _encdec_chunk(params, cfg, piece, caches, kv):
-    """One decoder prefill chunk against precomputed cross K/V."""
-    from repro.models.layers import dense_apply, embedding_apply, rmsnorm_apply
+    """One decoder prefill chunk against precomputed cross K/V.
+    Returns (last-position hidden state, caches) — the head is applied
+    once, after the final chunk (``_encdec_head``)."""
+    from repro.models.layers import embedding_apply
 
     x = embedding_apply(params["embed"], piece)
     pos0 = caches["len"][0]
     positions = pos0 + jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
     x, caches = encdec._dec_stack(params, cfg, x, positions, kv, caches)
-    x = rmsnorm_apply(params["final_norm"], x[:, -1:], cfg.norm_eps)
-    return dense_apply(params["lm_head"], x), caches
+    return x[:, -1:], caches
+
+
+def _encdec_head(params, cfg, last_h):
+    from repro.models.layers import dense_apply, rmsnorm_apply
+
+    x = rmsnorm_apply(params["final_norm"], last_h, cfg.norm_eps)
+    return dense_apply(params["lm_head"], x)
 
 
 def make_serve_step(cfg):
