@@ -2,11 +2,13 @@
 
 ``PYTHONPATH=src python -m benchmarks.run``  prints a CSV summary
 (``name,us_per_call,derived``) after each module's detailed output and
-writes the same rows machine-readably to ``BENCH_kernels.json`` so CI
-can archive the per-PR perf trajectory.
+writes the same rows machine-readably to ``BENCH_kernels.json``
+(``pipeline_bench`` rows go to ``BENCH_pipeline.json``) so CI can
+archive the per-PR perf trajectory.
 
 ``--only mod1,mod2`` restricts to a subset (CI smoke runs
-``--only kernel_bench,attn_bench``).
+``--only kernel_bench,attn_bench`` and, under 4 fake devices,
+``--only pipeline_bench``).
 """
 
 from __future__ import annotations
@@ -18,6 +20,9 @@ import sys
 import traceback
 
 BENCH_JSON = "BENCH_kernels.json"
+PIPELINE_JSON = "BENCH_pipeline.json"
+#: modules whose rows are archived separately from the kernel JSON
+_SPLIT_JSON = {"pipeline_bench": PIPELINE_JSON}
 
 
 def _capture(mod_main):
@@ -67,17 +72,20 @@ def main(argv=None) -> None:
         fig3_zynq_cluster,
         fig4_ultrascale_cluster,
         kernel_bench,
+        pipeline_bench,
         power,
         strategy_tpu,
     )
 
     csv_rows: list[str] = []
+    per_module: dict[str, list[str]] = {}
     modules = [
         ("fig3_zynq_cluster", fig3_zynq_cluster.main),
         ("fig4_ultrascale_cluster", fig4_ultrascale_cluster.main),
         ("discussion_reconfig", discussion_reconfig.main),
         ("kernel_bench", kernel_bench.main),
         ("attn_bench", attn_bench.main),
+        ("pipeline_bench", pipeline_bench.main),
         ("strategy_tpu", strategy_tpu.main),
         ("power", power.main),
     ]
@@ -98,7 +106,9 @@ def main(argv=None) -> None:
     for name, fn in modules:
         print(f"\n{'='*72}\n== benchmarks.{name}\n{'='*72}")
         try:
-            csv_rows += _capture(fn)
+            rows = _capture(fn)
+            per_module[name] = rows
+            csv_rows += rows
         except Exception:
             failed.append(name)
             traceback.print_exc()
@@ -106,7 +116,13 @@ def main(argv=None) -> None:
     print(f"\n{'='*72}\n== SUMMARY (name,us_per_call,derived)\n{'='*72}")
     for row in csv_rows:
         print(row)
-    _write_json(csv_rows)
+    kernel_rows = [r for mod, rows in per_module.items()
+                   if mod not in _SPLIT_JSON for r in rows]
+    if any(mod not in _SPLIT_JSON for mod in per_module):
+        _write_json(kernel_rows)
+    for mod, path in _SPLIT_JSON.items():
+        if mod in per_module:
+            _write_json(per_module[mod], path)
     if failed:
         print(f"\nFAILED modules: {failed}")
         raise SystemExit(1)

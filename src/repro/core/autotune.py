@@ -59,6 +59,42 @@ class TuneResult:
         return self.baseline_ms / self.best_ms
 
 
+def tune_microbatches(
+    stages: int,
+    global_batch: int,
+    schedule: str = "1f1b",
+    bubble_target: float = 0.15,
+    max_microbatches: int | None = None,
+) -> int:
+    """Pick ``num_microbatches`` for the pipeline runtime.
+
+    More microbatches shrink the pipeline bubble (idle fraction ~
+    (stages-1)/(m+stages-1)) but also shrink the per-microbatch batch,
+    hurting arithmetic intensity.  The bubble fraction decays
+    monotonically toward zero, so "as close to optimal as possible"
+    degenerates to one-sample microbatches; instead we take the
+    *smallest* divisor of the global batch (the runtime's divisibility
+    requirement) whose idle fraction is already at or below
+    ``bubble_target``.  When no candidate reaches the target (small
+    batches), fall back to the smallest divisor that at least fills the
+    pipe (``m >= stages``) — chasing the least bubble there would
+    monotonically pick the max divisor, i.e. 1-sample microbatches.
+    """
+    from repro.core.partition import pipeline_bubble_counts
+
+    cap = min(global_batch, max_microbatches or global_batch)
+    cands = [m for m in range(1, cap + 1) if global_batch % m == 0]
+
+    def bubble(m: int) -> float:
+        rounds, busy, idle = pipeline_bubble_counts(stages, m, schedule)
+        return idle / max(busy + idle, 1)
+
+    for m in cands:  # ascending: smallest m that meets the target
+        if bubble(m) <= bubble_target:
+            return m
+    return next((m for m in cands if m >= stages), cands[-1])
+
+
 def tune(graph: Graph, board: BoardModel) -> TuneResult:
     baseline = graph_service_time(board, graph) * 1e3
     rows = []

@@ -376,6 +376,26 @@ def resnet18_graph(
     return Graph("resnet18", ops)
 
 
+def config_graph(cfg, seq_len: int = 4096) -> "Graph":
+    """Planner graph for a :class:`repro.configs.base.ModelConfig` — the
+    per-layer cost source for pipeline balancing in the launchers."""
+    return transformer_graph(
+        cfg.name,
+        num_layers=cfg.num_layers,
+        d_model=cfg.d_model,
+        num_heads=max(cfg.num_heads, 1),
+        kv_heads=max(cfg.kv_heads, 1),
+        d_ff=cfg.d_ff,
+        vocab=cfg.vocab,
+        seq_len=seq_len,
+        moe_experts=cfg.moe_experts,
+        moe_top_k=cfg.moe_top_k,
+        moe_shared=cfg.moe_shared_experts,
+        ssm_state=cfg.ssm_state,
+        attn_free=cfg.is_attention_free,
+    )
+
+
 def transformer_graph(
     name: str,
     *,

@@ -122,39 +122,28 @@ def rebalance(
         return plan  # round-robin already self-balances via FIFO queues
 
     if plan.strategy == "pipeline":
-        # re-CUT the stages so each node's stage cost is proportional to
-        # its observed rate (a slow node gets a short stage)
-        n = plan.num_nodes
-        rates = [max(node_rates.get(i, 1.0), 1e-3) for i in range(n)]
-        total = sum(op.macs for op in graph.ops)
-        rsum = sum(rates)
-        stages: list[list] = []
-        assignment: dict[str, tuple[int, ...]] = {}
-        ops = list(graph.ops)
-        idx = 0
-        for s in range(n):
-            target = total * rates[s] / rsum
-            seg: list = []
-            acc = 0.0
-            while idx < len(ops) and (
-                acc < target or s == n - 1 or len(ops) - idx <= 0
-            ):
-                if s < n - 1 and seg and acc + ops[idx].macs > target * 1.5:
-                    break
-                # always leave at least one op per remaining stage
-                if s < n - 1 and len(ops) - idx <= (n - 1 - s):
-                    break
-                seg.append(ops[idx])
-                acc += ops[idx].macs
-                idx += 1
-            if not seg:  # guarantee non-empty stages
-                seg.append(ops[idx])
-                idx += 1
-            stages.append(seg)
+        # re-CUT the stages so each node's *service time* is balanced:
+        # min-max DP over op costs with per-stage rate weights, so a
+        # half-speed node is assigned roughly half the MACs (the greedy
+        # proportional fill this replaces could overshoot a slow node's
+        # target by a whole op; the DP is exactly optimal for the
+        # linearized graph).  Unlike graph.cut_segments this optimizes
+        # MAC balance only — no boundary-transfer-bytes penalty — so
+        # even uniform rates may move cuts relative to the original
+        # plan; rebalance is only invoked when rates are skewed.
+        from repro.core.partition import partition_layers
         from repro.core.strategies import StagePlan
 
+        n = plan.num_nodes
+        rates = [max(node_rates.get(i, 1.0), 1e-3) for i in range(n)]
+        ops = list(graph.ops)
+        bounds = partition_layers(
+            [max(op.macs, 1.0) for op in ops], n, stage_weights=rates
+        )
+        assignment: dict[str, tuple[int, ...]] = {}
         stage_plans = []
-        for s, seg in enumerate(stages):
+        for s in range(n):
+            seg = ops[bounds[s] : bounds[s + 1]]
             names = tuple(op.name for op in seg)
             stage_plans.append(StagePlan(names, (s,)))
             for nm in names:

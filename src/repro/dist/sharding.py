@@ -14,9 +14,13 @@ paper's strategies; this module lowers that choice onto an actual
                          data axes sharding the complementary weight dim
   pipeline            -> the 'model' axis shards the *leading layer
                          axis* of stacked blocks (stage k physically
-                         holds its contiguous layer slice, matching
+                         holds its — possibly padded, uneven-cut —
+                         contiguous layer slice, matching
                          :mod:`repro.dist.pipeline`'s shard_map
-                         in_specs); non-stacked params follow 'fused'
+                         in_specs); non-stacked params (embed / head /
+                         final norm) stay off 'model' and FSDP over the
+                         data axes only, since the pipelined train step
+                         replicates them into the last stage's loss head
 
 Everything here is *mesh-safe by construction*: every emitted spec runs
 through :func:`fix_spec`, which drops any sharding whose dimension does
@@ -311,16 +315,27 @@ def param_specs(params, mesh: Mesh, strategy: str = "fused"):
             return P()
         names = _key_names(path)
         spec = [None] * len(shape)
-        if strategy == "pipeline" and names and names[0] in _STACKED_SUBTREES:
-            # layer axis only: the pipeline shard_map's in_specs is
-            # P('model'), so any extra dp sharding here would be
-            # all-gathered on every forward call
-            spec[0] = MDL if MDL in mesh.shape else None
+        if strategy == "pipeline":
+            if names and names[0] in _STACKED_SUBTREES:
+                # layer axis only: the pipeline shard_map's in_specs is
+                # P('model') on the (possibly padded, stages*max_depth)
+                # layer axis, so any extra dp sharding here would be
+                # all-gathered on every forward call
+                spec[0] = MDL if MDL in mesh.shape else None
+                return P(*fix_spec(tuple(spec), shape, mesh))
+            # non-stacked params (embed / head / final norm) stay OFF the
+            # 'model' axis: the train pipe folds the loss head into the
+            # last stage with replicated in_specs, so a model-axis shard
+            # here would be re-gathered along the stage axis every step.
+            # FSDP over the data axes still bounds their memory.
+            fs = _fsdp_dim(names, shape, None)
+            if fs is not None:
+                spec[fs] = dp_entry
             return P(*fix_spec(tuple(spec), shape, mesh))
         tp = _tp_dim(names, len(shape))
         if tp is not None and MDL in mesh.shape:
             spec[tp] = MDL
-        if strategy in ("fused", "pipeline"):
+        if strategy == "fused":
             fs = _fsdp_dim(names, shape, tp)
             if fs is not None:
                 spec[fs] = dp_entry

@@ -122,8 +122,24 @@ def lower_cell(arch: str, shape_name: str, mesh, strategy: str = "fused",
             ga = grad_accum if grad_accum is not None else (
                 specs_mod.TRAIN_GRAD_ACCUM.get(arch, 1)
             )
-            step = make_train_step(cfg, AdamWConfig(), grad_accum=ga)
-            s_specs = state_specs(specs["state"], mesh, strategy)
+            if strategy == "pipeline":
+                # planner->runtime loop: cost-balanced uneven stage cuts
+                # from the config's per-layer graph; microbatches reuse
+                # the grad-accum knob (same memory semantics)
+                from repro.core.placement import pipeline_boundaries
+                from repro.train.step import make_pipeline_train_step
+
+                stages = mesh.shape.get("model", 1)
+                bounds = pipeline_boundaries(cfg, shape.seq_len, stages)
+                step = make_pipeline_train_step(
+                    cfg, AdamWConfig(), mesh,
+                    num_microbatches=max(ga, 1), boundaries=bounds,
+                )
+                state_sh = specs_mod.pipeline_state_shapes(cfg, bounds)
+            else:
+                step = make_train_step(cfg, AdamWConfig(), grad_accum=ga)
+                state_sh = specs["state"]
+            s_specs = state_specs(state_sh, mesh, strategy)
             b_specs = batch_specs_tree(specs["batch"], mesh)
             jitted = jax.jit(
                 step,
@@ -131,7 +147,7 @@ def lower_cell(arch: str, shape_name: str, mesh, strategy: str = "fused",
                 out_shardings=(_ns(mesh, s_specs), None),
                 donate_argnums=(0,),
             )
-            lowered = jitted.lower(specs["state"], specs["batch"])
+            lowered = jitted.lower(state_sh, specs["batch"])
         elif shape.kind == "prefill":
             pstep = make_prefill_step(cfg)
             p_specs = param_specs(specs_mod.param_shapes(cfg), mesh, strategy)
@@ -181,6 +197,15 @@ def lower_cell(arch: str, shape_name: str, mesh, strategy: str = "fused",
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool, strategy: str = "fused",
              grad_accum: int | None = None, verbose: bool = True):
+    if strategy == "pipeline":
+        cfg = get_config(arch)
+        if (SHAPES[shape_name].kind != "train" or cfg.attn_every
+                or cfg.is_enc_dec or cfg.frontend):
+            return {"arch": arch, "shape": shape_name,
+                    "mesh": "2x16x16" if multi_pod else "16x16",
+                    "status": "skipped",
+                    "reason": "pipeline strategy lowers the homogeneous "
+                              "token-only decoder train path only"}
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     lowered = lower_cell(arch, shape_name, mesh, strategy, grad_accum)
@@ -234,7 +259,8 @@ def main(argv=None):
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--strategy", default="fused",
-                    choices=["fused", "ai_core_assignment", "scatter_gather"])
+                    choices=["fused", "ai_core_assignment", "scatter_gather",
+                             "pipeline"])
     ap.add_argument("--grad-accum", type=int, default=None)
     ap.add_argument("--out", default="dryrun_results.jsonl")
     args = ap.parse_args(argv)

@@ -75,6 +75,19 @@ def param_shapes(cfg: ModelConfig, dtype=jnp.bfloat16):
     return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), cfg, dtype))
 
 
+def pipeline_state_shapes(cfg: ModelConfig, boundaries, dtype=jnp.bfloat16):
+    """Train-state shapes with blocks padded to the pipeline's uneven-cut
+    stage layout (pad_pipeline_params is shape-polymorphic under
+    eval_shape, so nothing here allocates either)."""
+    from repro.train.step import init_pipeline_state
+
+    mdt = jnp.bfloat16 if cfg.name in BF16_MOMENTS else jnp.float32
+    return jax.eval_shape(
+        lambda: init_pipeline_state(jax.random.PRNGKey(0), cfg, boundaries,
+                                    dtype, mdt)
+    )
+
+
 def cache_shapes(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     model = encdec if cfg.is_enc_dec else transformer
     return jax.eval_shape(lambda: model.init_caches(cfg, batch, max_len, dtype))

@@ -25,7 +25,12 @@ from repro.ft.elastic import make_mesh_for
 from repro.ft.straggler import StragglerMonitor
 from repro.launch.mesh import make_production_mesh
 from repro.optim.adamw import AdamWConfig, OptState
-from repro.train.step import init_state, make_train_step
+from repro.train.step import (
+    init_pipeline_state,
+    init_state,
+    make_pipeline_train_step,
+    make_train_step,
+)
 
 
 def main(argv=None):
@@ -35,7 +40,13 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--grad-accum", type=int, default=1)
-    ap.add_argument("--strategy", default="fused")
+    ap.add_argument("--strategy", default="fused",
+                    choices=["fused", "ai_core_assignment", "scatter_gather",
+                             "pipeline"])
+    ap.add_argument("--pipeline-schedule", default="1f1b",
+                    choices=["gpipe", "1f1b"])
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="pipeline microbatches (0 -> bubble-tuned)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--ckpt", default="")
@@ -52,10 +63,34 @@ def main(argv=None):
     print(f"mesh {dict(mesh.shape)}  arch {cfg.name}  strategy {args.strategy}")
 
     opt = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps)
-    step_fn = make_train_step(cfg, opt, grad_accum=args.grad_accum)
+    boundaries = None
+    if args.strategy == "pipeline":
+        # close the planner->runtime loop: cost-balanced cuts from the
+        # config's per-layer cost graph, bubble-tuned microbatch count
+        from repro.core.autotune import tune_microbatches
+        from repro.core.placement import pipeline_boundaries
+
+        stages = mesh.shape.get("model", 1)
+        boundaries = pipeline_boundaries(cfg, args.seq, stages)
+        microbatches = args.microbatches or tune_microbatches(
+            stages, args.batch, args.pipeline_schedule
+        )
+        print(f"pipeline stages {stages}  boundaries {boundaries}  "
+              f"microbatches {microbatches}  schedule {args.pipeline_schedule}")
+        step_fn = make_pipeline_train_step(
+            cfg, opt, mesh, num_microbatches=microbatches,
+            boundaries=boundaries, schedule=args.pipeline_schedule,
+        )
+    else:
+        step_fn = make_train_step(cfg, opt, grad_accum=args.grad_accum)
 
     with mesh:
-        state = init_state(jax.random.PRNGKey(0), cfg, jnp.float32)
+        if args.strategy == "pipeline":
+            state = init_pipeline_state(
+                jax.random.PRNGKey(0), cfg, boundaries, jnp.float32
+            )
+        else:
+            state = init_state(jax.random.PRNGKey(0), cfg, jnp.float32)
         pspecs = param_specs(state["params"], mesh, args.strategy)
         sspecs = {"params": pspecs,
                   "opt": OptState(mu=pspecs, nu=pspecs, step=P()),

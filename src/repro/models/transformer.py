@@ -79,14 +79,21 @@ def _ffn_init(key, cfg, dtype):
     return None
 
 
-def _ffn_apply(p, cfg, x, dropless=False):
+def _ffn_apply(p, cfg, x, dropless=False, cap=None):
     if cfg.moe_experts:
         # serving capacity: exactly-dropless (cap == tokens) for small
         # decode batches; for big prefill token counts a 4x-balanced
-        # bound keeps the dispatch buffers O(n*topk/e) instead of O(n*e)
+        # bound keeps the dispatch buffers O(n*topk/e) instead of O(n*e).
+        # An explicit ``cap`` overrides both: the pipeline runtime sizes
+        # it from the GLOBAL batch so microbatched routing matches the
+        # full-batch forward below capacity — clamped to this call's
+        # token count (a per-expert load can never exceed it, so the
+        # clamp keeps droplessness while the buffers stay O(microbatch),
+        # not O(global batch)).
         n = x.shape[0] * x.shape[1]
-        cap = None
-        if dropless:
+        if cap is not None:
+            cap = min(cap, n)
+        elif dropless:
             generous = -(-2 * n * cfg.moe_top_k // cfg.moe_experts)
             cap = n if n <= 4096 else min(n, generous)
         return moe_mod.moe_apply(p, cfg, x, capacity=cap)
@@ -110,7 +117,7 @@ def block_init(key, cfg, dtype):
     return p
 
 
-def block_apply(p, cfg, x, positions, cache=None):
+def block_apply(p, cfg, x, positions, cache=None, moe_cap=None):
     h, new_cache = _mixer_apply(p["mixer"], cfg,
                                 rmsnorm_apply(p["norm1"], x, cfg.norm_eps),
                                 positions, cache)
@@ -119,7 +126,7 @@ def block_apply(p, cfg, x, positions, cache=None):
     if "ffn" in p:
         h, aux = _ffn_apply(p["ffn"], cfg,
                             rmsnorm_apply(p["norm2"], x, cfg.norm_eps),
-                            dropless=cache is not None)
+                            dropless=cache is not None, cap=moe_cap)
         x = x + h
     return x, new_cache, aux
 

@@ -8,6 +8,13 @@ Grad accumulation runs as a ``lax.scan`` over microbatches so arbitrary
 global batches fit; the accumulated grads are the carry (f32).  The
 backward is rematerialized per layer (scan-over-layers + jax.checkpoint
 in the model), the standard memory/compute trade at pod scale.
+
+``make_pipeline_train_step`` is the pipeline-parallel sibling: the same
+microbatch grad accumulation, but *through* the shard_map pipe of
+:mod:`repro.dist.pipeline` (uneven stage cuts, gpipe or 1f1b schedule)
+instead of a scan on every device.  Its state must be created with
+``init_pipeline_state`` so the stacked blocks carry the padded
+stage-sharded layout.
 """
 
 from __future__ import annotations
@@ -90,6 +97,20 @@ def init_state(key, cfg, dtype=jnp.bfloat16, moments_dtype=jnp.float32):
             "step": jnp.zeros((), jnp.int32)}
 
 
+def init_pipeline_state(key, cfg, boundaries, dtype=jnp.bfloat16,
+                        moments_dtype=jnp.float32):
+    """Train state whose blocks are padded to the pipeline's uneven-cut
+    layout (optimizer moments are images of the padded params, so they
+    inherit the stage sharding like everything else)."""
+    from repro.dist.pipeline import pad_pipeline_params
+
+    params = pad_pipeline_params(
+        transformer.init(key, cfg, dtype), cfg, boundaries
+    )
+    return {"params": params, "opt": adamw.init(params, moments_dtype),
+            "step": jnp.zeros((), jnp.int32)}
+
+
 def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, *, grad_accum: int = 1,
                     aux_weight: float = 0.01, remat: bool = True,
                     compress=None):
@@ -128,6 +149,40 @@ def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, *, grad_accum: int = 1,
 
         new_params, opt, opt_metrics = adamw.apply(opt_cfg, params, grads, state["opt"])
         new_state = dict(state, params=new_params, opt=opt, step=state["step"] + 1)
+        return new_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_pipeline_train_step(cfg, opt_cfg: adamw.AdamWConfig, mesh, *,
+                             num_microbatches: int = 8, boundaries=None,
+                             schedule: str = "1f1b", aux_weight: float = 0.01,
+                             remat: bool = True, compress=None):
+    """Pipeline-parallel ``train_step(state, batch) -> (state, metrics)``.
+
+    Microbatch gradient accumulation runs *through* the shard_map pipe
+    (``repro.dist.pipeline.make_pipeline_loss_and_grad``): layer grads
+    come out stage-sharded exactly like the padded params, so the AdamW
+    update is local to each stage.  ``boundaries`` are the planner's
+    uneven layer cuts (``Placement.layer_boundaries``); ``schedule`` is
+    'gpipe' or '1f1b' (bitwise-equal results, fewer idle stage-rounds).
+    """
+    from repro.dist.pipeline import make_pipeline_loss_and_grad
+
+    loss_grad = make_pipeline_loss_and_grad(
+        cfg, mesh, num_microbatches=num_microbatches, boundaries=boundaries,
+        schedule=schedule, aux_weight=aux_weight, remat=remat,
+    )
+
+    def train_step(state, batch):
+        (loss, metrics), grads = loss_grad(state["params"], batch)
+        if compress is not None:
+            grads, state = compress.apply(grads, state)
+        new_params, opt, opt_metrics = adamw.apply(
+            opt_cfg, state["params"], grads, state["opt"]
+        )
+        new_state = dict(state, params=new_params, opt=opt,
+                         step=state["step"] + 1)
         return new_state, {"loss": loss, **metrics, **opt_metrics}
 
     return train_step

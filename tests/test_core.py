@@ -1,9 +1,20 @@
-"""Graph IR, strategies, scheduler, and simulator behaviour."""
+"""Graph IR, strategies, scheduler, partitioning, and simulator
+behaviour."""
+
+import itertools
 
 import pytest
 
 from repro.core.cost_model import GBE, ULTRASCALE, ZYNQ7020
 from repro.core.graph import Graph, Op, resnet18_graph, transformer_graph
+from repro.core.partition import (
+    even_boundaries,
+    layer_boundaries_from_plan,
+    layer_costs,
+    partition_layers,
+    stage_costs,
+    stage_depths,
+)
 from repro.core.scheduler import auto_schedule, predict, rebalance
 from repro.core.simulator import graph_service_time, simulate
 from repro.core.strategies import STRATEGIES, make_plan
@@ -102,6 +113,159 @@ class TestStrategies:
         widths = [len(s.nodes) for s in plan.stages]
         assert sum(widths) == 12
         assert all(w >= 1 for w in widths)
+
+
+def _brute_force_minmax(costs, stages, weights=None):
+    """Exhaustive min-max over all contiguous partitions (small n)."""
+    n = len(costs)
+    rates = weights or [1.0] * stages
+    best = float("inf")
+    for cuts in itertools.combinations(range(1, n), stages - 1):
+        bounds = (0,) + cuts + (n,)
+        cost = max(
+            sum(costs[a:b]) / r for a, b, r in zip(bounds, bounds[1:], rates)
+        )
+        best = min(best, cost)
+    return best
+
+
+class TestPartition:
+    def test_hand_computable_optimum(self):
+        # [4,1,1,1,1,4] into 3 stages: isolate the heavy ends, middle
+        # stage takes all four light layers -> max stage cost 4
+        bounds = partition_layers([4, 1, 1, 1, 1, 4], 3)
+        assert bounds == (0, 1, 5, 6)
+        assert stage_costs([4, 1, 1, 1, 1, 4], bounds) == (4, 4, 4)
+
+    @pytest.mark.parametrize("costs", [
+        [1, 1, 1, 1, 1, 1, 1, 1],
+        [8, 1, 1, 1, 1, 1, 1, 1],
+        [1, 2, 3, 4, 5, 6, 7, 8],
+        [5, 1, 5, 1, 5, 1, 5, 1],
+    ])
+    @pytest.mark.parametrize("stages", [2, 3, 4])
+    def test_dp_matches_brute_force(self, costs, stages):
+        bounds = partition_layers(costs, stages)
+        got = max(stage_costs(costs, bounds))
+        assert got == pytest.approx(_brute_force_minmax(costs, stages))
+
+    def test_stage_weights_shrink_slow_stage(self):
+        # a half-speed stage 0 receives about half the layers
+        bounds = partition_layers([1.0] * 12, 4,
+                                  stage_weights=[0.5, 1.0, 1.0, 1.0])
+        depths = stage_depths(bounds)
+        assert depths[0] < max(depths[1:])
+        # weighted DP matches the weighted brute force
+        got = max(
+            s / r for s, r in zip(stage_costs([1.0] * 12, bounds),
+                                  [0.5, 1.0, 1.0, 1.0])
+        )
+        assert got == pytest.approx(
+            _brute_force_minmax([1.0] * 12, 4, [0.5, 1.0, 1.0, 1.0])
+        )
+
+    def test_even_boundaries_near_even(self):
+        assert even_boundaries(8, 4) == (0, 2, 4, 6, 8)
+        assert set(stage_depths(even_boundaries(10, 4))) == {2, 3}
+
+    def test_errors(self):
+        with pytest.raises(ValueError):
+            partition_layers([1, 2], 3)  # more stages than layers
+        with pytest.raises(ValueError):
+            partition_layers([1, 2, 3], 0)
+        with pytest.raises(ValueError):
+            stage_depths((0, 2, 2, 4))  # empty stage
+
+    def test_layer_costs_from_transformer_graph(self):
+        tg = transformer_graph(
+            "t", num_layers=4, d_model=64, num_heads=4, kv_heads=2,
+            d_ff=128, vocab=1000, seq_len=128,
+        )
+        costs = layer_costs(tg)
+        assert len(costs) == 4
+        assert all(c > 0 for c in costs)
+        # book-end ops excluded: per-layer costs are uniform here
+        assert max(costs) == pytest.approx(min(costs))
+
+    def test_boundaries_from_plan_roundtrip(self):
+        tg = transformer_graph(
+            "t", num_layers=8, d_model=64, num_heads=4, kv_heads=2,
+            d_ff=128, vocab=1000, seq_len=128,
+        )
+        plan = make_plan(tg, "pipeline", 4)
+        bounds = layer_boundaries_from_plan(plan, 8)
+        assert bounds is not None
+        assert bounds[0] == 0 and bounds[-1] == 8
+        assert stage_depths(bounds)  # non-empty, increasing
+
+    def test_plan_num_layers(self):
+        from repro.core.partition import plan_num_layers
+
+        tg = transformer_graph(
+            "t", num_layers=8, d_model=64, num_heads=4, kv_heads=2,
+            d_ff=128, vocab=1000, seq_len=128,
+        )
+        assert plan_num_layers(make_plan(tg, "pipeline", 4)) == 8
+        g2 = Graph("g2", [Op("a", "dense", 1, 1, 1, 0),
+                          Op("b", "dense", 1, 1, 1, 0, deps=("a",))])
+        assert plan_num_layers(make_plan(g2, "pipeline", 2)) is None
+        # resnet's layer{stage}.{block} names match the pattern but skip
+        # layer0, so boundary recovery must reject them downstream
+        from repro.core.partition import layer_boundaries_from_plan
+        rplan = make_plan(resnet18_graph(), "pipeline", 4)
+        n = plan_num_layers(rplan)
+        assert n is None or layer_boundaries_from_plan(rplan, n) is None
+
+    def test_rebalance_emits_uneven_boundaries(self):
+        """Planner->runtime loop: skewed node rates re-cut the pipeline
+        so the slow node's stage is shortest, and the cuts survive as
+        layer boundaries for the runtime."""
+        tg = transformer_graph(
+            "t", num_layers=8, d_model=64, num_heads=4, kv_heads=2,
+            d_ff=128, vocab=1000, seq_len=128,
+        )
+        plan = make_plan(tg, "pipeline", 4)
+        re = rebalance(tg, plan, {0: 0.25, 1: 1.0, 2: 1.0, 3: 1.0})
+        bounds = layer_boundaries_from_plan(re, 8)
+        assert bounds is not None
+        depths = stage_depths(bounds)
+        assert depths[0] < max(depths[1:])  # slow node -> short stage
+
+    def test_tune_microbatches_divides_batch(self):
+        from repro.core.autotune import tune_microbatches
+
+        for sched in ("gpipe", "1f1b"):
+            m = tune_microbatches(4, 48, sched)
+            assert 48 % m == 0 and 1 <= m <= 48
+            # the bubble target must not degenerate to one-sample
+            # microbatches (bubble fraction decays monotonically, so
+            # "closest to optimal" would always pick the max divisor)
+            assert m < 48
+        # one stage has no bubble: smallest microbatch count wins
+        assert tune_microbatches(1, 64) == 1
+        # small batch: no divisor meets the target — fall back to the
+        # smallest m that fills the pipe, NOT 1-sample microbatches
+        assert tune_microbatches(4, 8) == 4
+
+    def test_bubble_oracle_is_planner_side(self):
+        # pure schedule arithmetic importable without the JAX runtime
+        from repro.core.partition import pipeline_bubble_counts
+
+        assert pipeline_bubble_counts(4, 8, "forward") == (11, 32, 12)
+
+    def test_pipeline_boundaries_hybrid_group_units(self):
+        """attn_every hybrids cut at GROUP granularity: the launcher
+        recipe must emit boundaries in the runtime's units (groups),
+        not raw layers."""
+        from repro.configs.base import get_config
+        from repro.core.placement import pipeline_boundaries
+
+        cfg = get_config("zamba2_2p7b").scaled_down(num_layers=8,
+                                                    attn_every=2)
+        bounds = pipeline_boundaries(cfg, 64, 2)
+        assert bounds[0] == 0 and bounds[-1] == 4  # 4 groups, not 8 layers
+        dense = get_config("qwen3_0p6b").scaled_down(num_layers=8)
+        assert pipeline_boundaries(dense, 64, 2)[-1] == 8
 
 
 class TestSimulator:
