@@ -8,7 +8,8 @@ archive the per-PR perf trajectory.
 
 ``--only mod1,mod2`` restricts to a subset (CI smoke runs
 ``--only kernel_bench,attn_bench`` and, under 4 fake devices,
-``--only pipeline_bench``).
+``--only pipeline_bench`` and ``--only serving_bench`` —
+``serving_bench`` rows go to ``BENCH_serving.json``).
 """
 
 from __future__ import annotations
@@ -21,8 +22,9 @@ import traceback
 
 BENCH_JSON = "BENCH_kernels.json"
 PIPELINE_JSON = "BENCH_pipeline.json"
+SERVING_JSON = "BENCH_serving.json"
 #: modules whose rows are archived separately from the kernel JSON
-_SPLIT_JSON = {"pipeline_bench": PIPELINE_JSON}
+_SPLIT_JSON = {"pipeline_bench": PIPELINE_JSON, "serving_bench": SERVING_JSON}
 
 
 def _capture(mod_main):
@@ -74,6 +76,7 @@ def main(argv=None) -> None:
         kernel_bench,
         pipeline_bench,
         power,
+        serving_bench,
         strategy_tpu,
     )
 
@@ -86,6 +89,7 @@ def main(argv=None) -> None:
         ("kernel_bench", kernel_bench.main),
         ("attn_bench", attn_bench.main),
         ("pipeline_bench", pipeline_bench.main),
+        ("serving_bench", serving_bench.main),
         ("strategy_tpu", strategy_tpu.main),
         ("power", power.main),
     ]

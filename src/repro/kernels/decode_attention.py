@@ -21,6 +21,18 @@ Layout mirrors ``flash_attention``: q folds the GQA group into rows,
 (B, Hkv, G, D) against (B, Hkv, Tp, D) K/V panels, f32 statistics.
 A per-partition execution counter backs the accounting tests and the
 ``attn_bench`` achieved-vs-skipped report.
+
+``paged_decode_attention`` is the **paged** variant the continuous-
+batching engine serves from (serve/engine.py): K/V live in fixed-size
+pages of a shared pool and each sequence owns a per-request **block
+table** of page indices.  The grid partition IS the page — the scalar-
+prefetched block table feeds the index map, so partition ``ip`` of
+sequence ``b`` DMAs pool page ``block_tables[b, ip]`` directly from
+wherever the allocator put it (no gather/copy of the cache before the
+kernel).  ``kv_lens`` is per-sequence, so one batched call serves
+sequences at wildly different fill levels, each at O(its own kv_len);
+dead partitions clamp onto the sequence's last live page exactly like
+the dense kernel clamps onto the last live tile.
 """
 
 from __future__ import annotations
@@ -38,20 +50,21 @@ from repro.kernels.vta_gemm import _compiler_params
 DEFAULT_BLOCK_K = 512
 
 
-def _decode_kernel(
-    sref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *refs,
-    kc, window, scale, with_counts,
+def _split_kv_partition(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, cnt_ref, *,
+    kvlen, k_lo, kc, window, scale,
 ):
-    cnt_ref = refs[0] if with_counts else None
-    ip = pl.program_id(2)
-    kvlen = sref[0]
-    k_lo = ip * kc
+    """One KV partition of a split-KV decode step: emit the unnormalized
+    partial output plus (m, l) online-softmax statistics, or neutral
+    statistics when the partition lies at/after ``kvlen`` (or fully
+    outside the sliding window).  Shared by the dense and paged kernels —
+    they differ only in where ``kvlen`` and the K/V panel come from."""
     q_pos = kvlen - 1  # the decoded token is the newest cache entry
 
     executed = k_lo < kvlen
     if window > 0:
         executed &= (k_lo + kc - 1) > (q_pos - window)
-    if with_counts:
+    if cnt_ref is not None:
         cnt_ref[...] = jnp.broadcast_to(
             executed.astype(jnp.int32), cnt_ref.shape)
 
@@ -85,6 +98,27 @@ def _decode_kernel(
         o_ref[...] = jnp.zeros_like(o_ref)
         m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
         l_ref[...] = jnp.zeros_like(l_ref)
+
+
+def _combine_partitions(o_part, m_part, l_part):
+    """Cross-partition max / logsumexp merge on (B, Hkv, P, G) arrays."""
+    m_glob = jnp.max(m_part, axis=2, keepdims=True)
+    # dead partitions carry m = -inf; exp(-inf - finite) = 0 kills them
+    alpha = jnp.exp(m_part - jnp.maximum(m_glob, MASK_VALUE))
+    den = jnp.sum(alpha * l_part, axis=2)  # (B, Hkv, G)
+    num = jnp.sum(alpha[..., None] * o_part, axis=2)  # (B, Hkv, G, Dv)
+    return num / jnp.maximum(den, 1e-30)[..., None]
+
+
+def _decode_kernel(
+    sref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *refs,
+    kc, window, scale, with_counts,
+):
+    cnt_ref = refs[0] if with_counts else None
+    ip = pl.program_id(2)
+    _split_kv_partition(
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, cnt_ref,
+        kvlen=sref[0], k_lo=ip * kc, kc=kc, window=window, scale=scale)
 
 
 def decode_attention(
@@ -160,16 +194,8 @@ def decode_attention(
         ),
         interpret=interpret,
     )(scalars, q3, k4, v4)
-    o_part, m_part, l_part = res[:3]
-
     # max / logsumexp combine across partitions (cheap: (B,Hkv,P,G))
-    m_glob = jnp.max(m_part, axis=2, keepdims=True)
-    # dead partitions carry m = -inf; exp(-inf - finite) = 0 kills them
-    alpha = jnp.exp(m_part - jnp.maximum(m_glob, MASK_VALUE))
-    den = jnp.sum(alpha * l_part, axis=2)  # (B, Hkv, G)
-    num = jnp.sum(alpha[..., None] * o_part, axis=2)  # (B, Hkv, G, Dv)
-    out = num / jnp.maximum(den, 1e-30)[..., None]
-    out = out.reshape(b, 1, h, dv).astype(q.dtype)
+    out = _combine_partitions(*res[:3]).reshape(b, 1, h, dv).astype(q.dtype)
     if return_counts:
         return out, res[3]
     return out
@@ -192,3 +218,135 @@ def decode_partition_counts(t: int, kv_len: int, *,
             live = live and (k_lo + kc - 1) > (kvlen - 1 - window)
         executed += int(live)
     return executed, np_
+
+
+# ---------------------------------------------------------------------------
+# paged variant: KV gathered through per-sequence block tables
+# ---------------------------------------------------------------------------
+
+
+def _paged_kernel(
+    btref, lref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *refs,
+    pg, window, scale, with_counts,
+):
+    cnt_ref = refs[0] if with_counts else None
+    ib, ip = pl.program_id(0), pl.program_id(2)
+    _split_kv_partition(
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, cnt_ref,
+        kvlen=lref[ib], k_lo=ip * pg, kc=pg, window=window, scale=scale)
+
+
+def _live_page_range(kvlen, *, pg, window):
+    """[first, last] live partition indices for a sequence of ``kvlen``
+    tokens (partition == page).  Mirrors the ``executed`` predicate in
+    ``_split_kv_partition``; empty caches collapse to [0, 0]."""
+    last = jnp.maximum((kvlen - 1) // pg, 0)
+    if window > 0:
+        # page ip is inside the window iff ip*pg + pg - 1 > q_pos - window
+        c = (kvlen - 1) - window + 2 - pg
+        first = jnp.maximum(jnp.int32(0), -((-c) // pg))
+    else:
+        first = jnp.int32(0)
+    return first, jnp.maximum(last, first)
+
+
+def paged_decode_attention(
+    q, k_pages, v_pages, block_tables, kv_lens, *,
+    window: int = 0,
+    scale: float | None = None,
+    dv: int | None = None,
+    interpret: bool = False,
+    return_counts: bool = False,
+):
+    """Split-KV decode attention over a paged KV pool.
+
+    q: (B, 1, H, D) — the new tokens' queries, K/V for them already
+    written into the pool (so sequence b's query sits at absolute
+    position ``kv_lens[b] - 1``);
+    k_pages / v_pages: (Hkv, num_pages, page_size, W) shared pools;
+    block_tables: (B, pages_per_seq) int32 pool-page indices — entries
+    past a sequence's live pages (and whole rows of inactive slots) may
+    be -1;
+    kv_lens: (B,) int32 live token counts, 0 for inactive slots (their
+    output is exactly zero).
+
+    ``dv`` reads only the leading ``dv`` columns of ``v_pages`` — this
+    lets MLA serve keys ``[c_kv | k_rope]`` and values ``c_kv`` out of
+    ONE pool without materializing a sliced copy.  One partition == one
+    page; partitions outside a sequence's [window, kv_len) range are
+    skipped under ``pl.when`` with their DMA clamped onto the last live
+    page.  Returns (B, 1, H, dv) [+ (B, Hkv, P) execution map].
+    """
+    b, s, h, d = q.shape
+    assert s == 1, f"paged_decode_attention is an S=1 kernel, got S={s}"
+    hkv, num_pages, pg, wk = k_pages.shape
+    assert wk >= d, (wk, d)
+    g = h // hkv
+    dv = v_pages.shape[-1] if dv is None else dv
+    scale = scale if scale is not None else d ** -0.5
+    max_pp = block_tables.shape[1]
+
+    q3 = q.reshape(b, hkv, g, d)
+    bt_flat = block_tables.reshape(-1).astype(jnp.int32)
+    lens = jnp.asarray(kv_lens, jnp.int32)
+
+    def kv_index(ib, ih, ip, btref, lref):
+        # dead partitions re-present the sequence's last live page: the
+        # block table is the DMA descriptor, -1 tails never dereference
+        first, last = _live_page_range(lref[ib], pg=pg, window=window)
+        page = btref[ib * max_pp + jnp.clip(ip, first, last)]
+        return ih, jnp.clip(page, 0, num_pages - 1), 0, 0
+
+    out_specs = [
+        pl.BlockSpec((1, 1, 1, g, dv), lambda ib, ih, ip, bt, l: (ib, ih, ip, 0, 0)),
+        pl.BlockSpec((1, 1, 1, g), lambda ib, ih, ip, bt, l: (ib, ih, ip, 0)),
+        pl.BlockSpec((1, 1, 1, g), lambda ib, ih, ip, bt, l: (ib, ih, ip, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, hkv, max_pp, g, dv), jnp.float32),
+        jax.ShapeDtypeStruct((b, hkv, max_pp, g), jnp.float32),
+        jax.ShapeDtypeStruct((b, hkv, max_pp, g), jnp.float32),
+    ]
+    if return_counts:
+        out_specs.append(
+            pl.BlockSpec((1, 1, 1), lambda ib, ih, ip, bt, l: (ib, ih, ip)))
+        out_shape.append(jax.ShapeDtypeStruct((b, hkv, max_pp), jnp.int32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, max_pp),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ip, bt, l: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, pg, d), kv_index),
+            pl.BlockSpec((1, 1, pg, dv), kv_index),
+        ],
+        out_specs=out_specs,
+    )
+    res = pl.pallas_call(
+        functools.partial(_paged_kernel, pg=pg, window=window, scale=scale,
+                          with_counts=return_counts),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(bt_flat, lens, q3, k_pages, v_pages)
+    out = _combine_partitions(*res[:3]).reshape(b, 1, h, dv).astype(q.dtype)
+    if return_counts:
+        return out, res[3]
+    return out
+
+
+def paged_partition_counts(pages_per_seq: int, kv_lens, *,
+                           page_size: int, window: int = 0):
+    """Per-sequence analytic (executed, total) page counts for one
+    batched paged decode step — ``decode_partition_counts`` evaluated
+    at each sequence's own fill level.  Returns (list[int], total)."""
+    t = pages_per_seq * page_size
+    executed = [
+        decode_partition_counts(t, int(n), block_k=page_size,
+                                window=window)[0]
+        for n in kv_lens
+    ]
+    return executed, pages_per_seq

@@ -4,6 +4,10 @@
 prefill + KV-cache decode loop on local devices with a reduced config;
 on a pod the same code path shards params/caches per the serving
 strategy (TP-biased by default — see EXPERIMENTS.md §Perf iteration A).
+
+``--engine paged`` runs the continuous-batching engine instead: paged
+KV cache, request-level admission, mixed prompt/generation lengths in
+one decode batch (EXPERIMENTS.md §Serving).
 """
 
 from __future__ import annotations
@@ -22,6 +26,34 @@ from repro.models import transformer as tf
 from repro.serve.step import make_prefill_step, make_serve_step
 
 
+def _run_paged_engine(params, cfg, args):
+    from repro.serve.engine import ServingEngine, latency_stats
+
+    max_len = args.prompt + args.new_tokens
+    eng = ServingEngine(
+        params, cfg, max_slots=args.batch, max_len=max_len,
+        page_size=args.page_size,
+        prefill_chunk=max(16, args.prompt // 4))
+    rng = jax.random.PRNGKey(1)
+    # mixed-length trace: prompts at the configured length, generation
+    # lengths spread 1/4x..1x so slots actually churn
+    for i in range(2 * args.batch):
+        rng, k = jax.random.split(rng)
+        prompt = jax.random.randint(k, (args.prompt,), 0, cfg.vocab)
+        new = max(1, args.new_tokens // (1 + i % 4))
+        eng.submit(jnp.asarray(prompt), new)
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    stats = latency_stats(done)
+    print(f"paged engine: {len(done)} requests, {stats['tokens']} tokens "
+          f"in {dt*1e3:.0f} ms over {eng.steps} decode steps "
+          f"({stats['tokens']/dt:.0f} tok/s)")
+    print(f"  token latency p50 {stats['token_p50_s']*1e3:.1f} ms, "
+          f"p99 {stats['token_p99_s']*1e3:.1f} ms; "
+          f"pool {eng.num_pages} pages x {args.page_size} slots")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_0p6b")
@@ -30,6 +62,10 @@ def main(argv=None):
     ap.add_argument("--prompt", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--strategy", default="fused")
+    ap.add_argument("--engine", choices=["static", "paged"], default="static",
+                    help="static: one fixed batch to completion; paged: "
+                         "continuous batching over the paged KV cache")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -38,6 +74,10 @@ def main(argv=None):
     if cfg.is_enc_dec or cfg.frontend:
         raise SystemExit("use examples/serve_batched.py variants for "
                          "frontend/enc-dec archs")
+    if args.engine == "paged":
+        params = tf.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        _run_paged_engine(params, cfg, args)
+        return
     mesh = make_mesh_for(jax.devices())
     max_len = args.prompt + args.new_tokens
 

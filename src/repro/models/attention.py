@@ -15,6 +15,15 @@ GQA:  {"k": (B, T, Hkv, D), "v": (B, T, Hkv, Dv), "len": i32}
 SWA:  same but T == window and writes wrap (rolling buffer, O(window))
 MLA:  {"ckv": (B, T, R), "k_rope": (B, T, Dr), "len": i32} — the
       compressed cache that makes deepseek-v2 long-context serving cheap.
+
+Paged decode (serve/kv_cache.py layout, S=1 only): the cache dict
+instead carries a shared page pool plus per-sequence routing —
+GQA:  {"k_pages"/"v_pages": (Hkv, P, page, D),
+       "block_tables": (B, pages), "len": (B,) i32}
+MLA:  {"kv_pages": (1, P, page, r+dr), ...} — and ``len`` is the
+per-sequence PRE-write fill (the engine owns its updates), so one
+batched step serves sequences at different fill levels.  Inactive
+slots (block_tables row -1) drop their write and emit zeros.
 """
 
 from __future__ import annotations
@@ -30,6 +39,7 @@ from repro.models.layers import (
     dense_apply,
     dense_init,
     flash_attend,
+    paged_decode_attend,
     rmsnorm_apply,
     rmsnorm_init,
     softmax_attend,
@@ -38,6 +48,30 @@ from repro.models.layers import (
 # sequences at or above this length attend via the chunked online-softmax
 # path (never materializes S x T logits); shorter ones go direct
 FLASH_MIN_SEQ = 512
+
+
+# ---------------------------------------------------------------------------
+# paged-cache plumbing (shared by GQA and MLA decode)
+# ---------------------------------------------------------------------------
+
+
+def _paged_token_coords(cache, pool_key):
+    """Where this step's token lands in the pool, per slot.
+
+    Returns (page, slot, new_len): page is the pool index at each
+    sequence's write position — inactive slots (block table row -1) get
+    ``num_pages``, i.e. out of bounds, so a ``mode="drop"`` scatter
+    discards them; new_len is the post-write per-sequence fill (0 stays
+    0 for inactive slots, which zeroes their attention output too).
+    """
+    bt, lens = cache["block_tables"], cache["len"]
+    num_pages, pg = cache[pool_key].shape[1], cache[pool_key].shape[2]
+    idx = jnp.clip(lens // pg, 0, bt.shape[1] - 1)
+    page = jnp.take_along_axis(bt, idx[:, None], axis=1)[:, 0]
+    page = jnp.where(page < 0, num_pages, page)
+    active = bt[:, 0] >= 0
+    new_len = jnp.where(active, lens + 1, 0)
+    return page, lens % pg, new_len
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +132,18 @@ def gqa_apply(p, cfg, x, positions, cache=None, *, bidirectional=False):
             )
             out = softmax_attend(q, k, v, mask)
         new_cache = None
+    elif "k_pages" in cache:
+        # paged decode: write the token into its pool page, attend
+        # through the block table (O(own kv_len) per sequence)
+        assert s == 1, f"paged GQA cache is decode-only, got S={s}"
+        page, slot, new_len = _paged_token_coords(cache, "k_pages")
+        kp = cache["k_pages"].at[:, page, slot].set(
+            k[:, 0].transpose(1, 0, 2), mode="drop")
+        vp = cache["v_pages"].at[:, page, slot].set(
+            v[:, 0].transpose(1, 0, 2), mode="drop")
+        out = paged_decode_attend(q, kp, vp, cache["block_tables"], new_len,
+                                  window=cfg.sliding_window)
+        new_cache = {"k_pages": kp, "v_pages": vp}
     else:
         t = cache["k"].shape[1]
         cur = cache["len"]
@@ -232,6 +278,25 @@ def _mla_attend(p, cfg, q_nope, q_rope, ckv, k_rope, mask=None, *,
     return out.reshape(b, s, h * dv).astype(q_nope.dtype)
 
 
+def _mla_absorbed_q(p, cfg, q_nope, q_rope):
+    """Fold ``Wuk`` into the query: latent-space queries (B,1,H,r+dr)."""
+    h, dn = q_nope.shape[2], q_nope.shape[3]
+    r = cfg.kv_lora_rank
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope,
+                       p["wuk"]["w"].reshape(r, h, dn))
+    q = jnp.concatenate([q_lat, q_rope], axis=-1)
+    return hint(q, DP, None, MDL, None)
+
+
+def _mla_up_project(p, cfg, out_lat):
+    """Up-project the single attended latent through ``Wuv``."""
+    b, s, h, r = out_lat.shape
+    dv = cfg.mla_v_head_dim
+    out = jnp.einsum("bshr,rhd->bshd", out_lat,
+                     p["wuv"]["w"].reshape(r, h, dv))
+    return out.reshape(b, s, h * dv)
+
+
 def _mla_attend_absorbed(p, cfg, q_nope, q_rope, ckv, k_rope, *, kv_len):
     """Decode (S=1) MLA via weight absorption: because
     ``k_nope[t,h] = Wuk[:,h]^T c_kv[t]``, the nope logits equal
@@ -240,19 +305,25 @@ def _mla_attend_absorbed(p, cfg, q_nope, q_rope, ckv, k_rope, *, kv_len):
     one shared KV head) and only the single attended latent goes through
     ``Wuv``.  The padded cache is never up-projected: per-step cost is
     the split-KV kernel's O(kv_len) plus O(h·r·(dn+dv)) for one token."""
-    b, s, h, dn = q_nope.shape
-    r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
-    dv = cfg.mla_v_head_dim
-    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope,
-                       p["wuk"]["w"].reshape(r, h, dn))
-    q = jnp.concatenate([q_lat, q_rope], axis=-1)  # (B, 1, H, r+dr)
-    q = hint(q, DP, None, MDL, None)
+    dn, dr = cfg.mla_head_dim, cfg.rope_head_dim
+    q = _mla_absorbed_q(p, cfg, q_nope, q_rope)
     k = jnp.concatenate([ckv, k_rope], axis=-1)[:, :, None, :]  # 1 kv head
     out_lat = decode_attend(q, k, ckv[:, :, None, :], kv_len=kv_len,
                             scale=(dn + dr) ** -0.5)  # (B, 1, H, r)
-    out = jnp.einsum("bshr,rhd->bshd", out_lat,
-                     p["wuv"]["w"].reshape(r, h, dv))
-    return out.reshape(b, s, h * dv)
+    return _mla_up_project(p, cfg, out_lat)
+
+
+def _mla_attend_absorbed_paged(p, cfg, q_nope, q_rope, pool, block_tables,
+                               kv_lens):
+    """Paged twin of ``_mla_attend_absorbed``: pool rows are
+    ``[c_kv | k_rope]``, so the pool serves as BOTH key and value pages
+    — ``dv=r`` reads the value c_kv as each row's leading columns."""
+    dn, dr = cfg.mla_head_dim, cfg.rope_head_dim
+    q = _mla_absorbed_q(p, cfg, q_nope, q_rope)
+    out_lat = paged_decode_attend(q, pool, pool, block_tables, kv_lens,
+                                  scale=(dn + dr) ** -0.5,
+                                  dv=cfg.kv_lora_rank)
+    return _mla_up_project(p, cfg, out_lat)
 
 
 def mla_apply(p, cfg, x, positions, cache=None):
@@ -262,6 +333,15 @@ def mla_apply(p, cfg, x, positions, cache=None):
         mask = causal_mask(s, s) if s < FLASH_MIN_SEQ else None
         out = _mla_attend(p, cfg, q_nope, q_rope, ckv, k_rope, mask)
         new_cache = None
+    elif "kv_pages" in cache:
+        # paged decode: one [c_kv | k_rope] row per token in the pool
+        assert s == 1, f"paged MLA cache is decode-only, got S={s}"
+        page, slot, new_len = _paged_token_coords(cache, "kv_pages")
+        row = jnp.concatenate([ckv, k_rope], axis=-1)[:, 0]  # (B, r+dr)
+        pool = cache["kv_pages"].at[0, page, slot].set(row, mode="drop")
+        out = _mla_attend_absorbed_paged(p, cfg, q_nope, q_rope, pool,
+                                         cache["block_tables"], new_len)
+        new_cache = {"kv_pages": pool}
     else:
         cur = cache["len"]
         t = cache["ckv"].shape[1]

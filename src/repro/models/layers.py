@@ -357,3 +357,67 @@ def decode_attend(q, k, v, *, kv_len, window: int = 0,
     # q_pos = kv_len - 1, so "<= q_pos" doubles as the kv_len clamp
     mask = causal_mask(1, k.shape[1], window=window, q_offset=kv_len - 1)
     return softmax_attend(q, k, v, mask, scale=scale)
+
+
+def paged_decode_attend(q, k_pages, v_pages, block_tables, kv_lens, *,
+                        window: int = 0, scale: float | None = None,
+                        dv: int | None = None):
+    """Single-token decode attention over a paged KV pool.
+
+    q: (B,1,H,D); k_pages/v_pages: (Hkv, num_pages, page_size, W) shared
+    pools; block_tables: (B, pages_per_seq) int32 page indices (-1 past
+    a sequence's live pages / for inactive slots); kv_lens: (B,)
+    per-sequence live token counts INCLUDING the just-written token
+    (0 = inactive slot, output exactly zero).  ``dv`` restricts values
+    to the leading columns of ``v_pages`` (the MLA shared-pool trick).
+    Dispatcher triplet of ``decode_attend``: the Pallas kernel DMAs
+    pages straight through the block table; the jnp fallback gathers
+    the pages dense and masks per sequence.
+    """
+    if _pallas_attention():
+        from repro.kernels.decode_attention import paged_decode_attention
+
+        return paged_decode_attention(
+            q, k_pages, v_pages, block_tables, kv_lens, window=window,
+            scale=scale, dv=dv, interpret=_pallas_interpret(),
+        )
+    return paged_decode_attend_ref(q, k_pages, v_pages, block_tables,
+                                   kv_lens, window=window, scale=scale,
+                                   dv=dv)
+
+
+def paged_decode_attend_ref(q, k_pages, v_pages, block_tables, kv_lens, *,
+                            window: int = 0, scale: float | None = None,
+                            dv: int | None = None):
+    """jnp reference: gather each sequence's pages into a dense
+    (B, T, Hkv, W) view (T = pages_per_seq * page_size, position order
+    preserved) and attend with a per-sequence length/window mask."""
+    b, s, h, d = q.shape
+    hkv, num_pages, pg, _ = k_pages.shape
+    g = h // hkv
+    dv = v_pages.shape[-1] if dv is None else dv
+    scale = scale if scale is not None else d ** -0.5
+    bt = jnp.clip(block_tables, 0, num_pages - 1)
+    t = bt.shape[1] * pg
+
+    def gather(pages, w):
+        dense = pages[:, bt]  # (Hkv, B, pages_per_seq, pg, W)
+        return dense.transpose(1, 2, 3, 0, 4).reshape(b, t, hkv, -1)[..., :w]
+
+    kd = gather(k_pages, d).astype(jnp.float32)
+    vd = gather(v_pages, dv).astype(jnp.float32)
+    lens = jnp.asarray(kv_lens, jnp.int32)
+    kv_pos = jnp.arange(t)
+    mask = kv_pos[None, :] < lens[:, None]  # (B, T)
+    if window > 0:
+        mask &= kv_pos[None, :] > (lens[:, None] - 1 - window)
+
+    qg = (q.astype(jnp.float32) * scale).reshape(b, hkv, g, d)
+    logits = jnp.einsum("bhgd,bthd->bhgt", qg, kd)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", probs, vd)
+    # fully-masked rows (inactive slots) must be exactly zero, like the
+    # kernel's all-dead combine
+    out = out * (lens > 0)[:, None, None, None]
+    return out.reshape(b, 1, h, dv).astype(q.dtype)

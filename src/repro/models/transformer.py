@@ -359,7 +359,23 @@ def _one_cache(cfg, batch, max_len, dtype):
     return attn.gqa_cache_init(cfg, batch, max_len, dtype)
 
 
-def init_caches(cfg, batch, max_len, dtype=jnp.bfloat16):
+def init_caches(cfg, batch, max_len, dtype=jnp.bfloat16, *,
+                cache_layout: str = "dense", page_size: int = 16,
+                num_pages: int | None = None):
+    """Serving caches.  ``cache_layout="dense"`` (default) is the
+    per-slot (B, max_len, ...) buffer every train/prefill path uses;
+    ``"paged"`` returns the serve/kv_cache.py pool layout (shared pages
+    + block tables + per-sequence lens) that ``decode_step`` serves via
+    the paged split-KV kernel — decode-only, engine-managed."""
+    if cache_layout == "paged":
+        from repro.serve.kv_cache import init_paged_caches
+
+        return init_paged_caches(cfg, batch, max_len, dtype,
+                                 page_size=page_size, num_pages=num_pages)
+    if cache_layout != "dense":
+        raise ValueError(f"cache_layout must be 'dense' or 'paged', "
+                         f"got {cache_layout!r}")
+
     def stack(n, make):
         return jax.tree.map(
             lambda *xs: jnp.stack(xs, axis=0), *[make() for _ in range(n)]
@@ -373,21 +389,59 @@ def init_caches(cfg, batch, max_len, dtype=jnp.bfloat16):
     return caches
 
 
-def prefill(params, cfg, tokens, caches, embeds=None):
+def prefill(params, cfg, tokens, caches, embeds=None, *, logit_index=None):
+    """``logit_index`` (static int OR traced scalar) reads the head at
+    that position instead of the last — how a right-padded prefill
+    chunk returns the last REAL token's logits (serve.step ragged
+    prefill; traced for the engine's bucketed prompt shapes)."""
     x = _embed(params, cfg, tokens, embeds)
     pos0 = _cache_len(cfg, caches)  # chunked prefill resumes mid-prompt
     positions = pos0 + jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
     x, caches, _ = _apply_stack(params, cfg, x, positions, caches)
-    return _head(params, cfg, x[:, -1:]), caches
+    if logit_index is None:
+        last = x[:, -1:]
+    else:
+        last = jax.lax.dynamic_slice_in_dim(x, logit_index, 1, axis=1)
+    return _head(params, cfg, last), caches
 
 
 def decode_step(params, cfg, token, caches, *, unroll=False):
     """token: (B, 1) int32.  One autoregressive step."""
+    if "block_tables" in caches:
+        return _paged_decode_step(params, cfg, token, caches)
     x = _embed(params, cfg, token, None)
     pos = _cache_len(cfg, caches)
     positions = jnp.broadcast_to(pos, x.shape[:2])
     x, caches, _ = _apply_stack(params, cfg, x, positions, caches, unroll=unroll)
     return _head(params, cfg, x), caches
+
+
+def _paged_decode_step(params, cfg, token, caches):
+    """One decode step against paged caches (serve/kv_cache.py layout).
+
+    Positions are PER-SEQUENCE (``lens``), so one batched step serves
+    requests at different fill levels — the continuous-batching
+    contract.  Layers run as an unrolled python loop over the per-layer
+    pool list: each pool updates in place (donated) without the
+    restack-copy a scanned carry would pay per token.
+    """
+    x = _embed(params, cfg, token, None)
+    lens = caches["lens"]
+    bt = caches["block_tables"]
+    positions = lens[:, None]  # the new token's absolute position
+    new_blocks = []
+    for li, pool in enumerate(caches["blocks"]):
+        p = jax.tree.map(lambda a: a[li], params["blocks"])
+        cache_i = dict(pool, block_tables=bt, len=lens)
+        x, nc, _ = block_apply(p, cfg, x, positions, cache_i)
+        new_blocks.append(nc)
+    active = bt[:, 0] >= 0
+    new_caches = {
+        "blocks": new_blocks,
+        "block_tables": bt,
+        "lens": jnp.where(active, lens + 1, lens),
+    }
+    return _head(params, cfg, x), new_caches
 
 
 def _cache_len(cfg, caches):

@@ -84,7 +84,12 @@ class Int8Compressor:
 
     @staticmethod
     def payload_bytes(params) -> int:
-        return sum(int(p.size) for p in jax.tree.leaves(params))  # 1B/elem
+        """Wire bytes of one compressed gradient exchange: 1 B/element
+        int8 payload PLUS the per-leaf f32 scale — the dequant metadata
+        crosses the wire with its leaf, so the roofline bandwidth
+        accounting must count it."""
+        leaves = jax.tree.leaves(params)
+        return sum(int(p.size) for p in leaves) + 4 * len(leaves)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,285 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+The static loop (launch/serve.py --engine static) admits one batch,
+decodes until the LONGEST request finishes, and only then admits the
+next — short requests ride along as dead slots, so token throughput
+collapses to ``mean(len) / max(len)`` of the batch.  This engine keeps a
+fixed grid of **decode slots** and schedules at REQUEST granularity,
+the way the paper schedules heterogeneous models onto one cluster:
+
+* a request is **admitted** the moment a slot is free AND the page
+  allocator can cover its worst case (prompt + max_new tokens — no
+  mid-flight preemption to reason about);
+* admission runs the request's **chunked prefill** on a batch-1 dense
+  cache (the ragged-prefill path, so arbitrary prompt lengths jit at
+  one chunk shape) and scatters the rows into its pages
+  (``kv_cache.write_prompt_pages``) — prefill interleaves between
+  decode steps rather than stalling a monolithic batch;
+* every engine step runs ONE jitted paged decode over all slots —
+  per-sequence block tables and lens mean mixed fill levels batch
+  together, inactive slots mask to zeros;
+* finished sequences **retire** at the end of the step that completed
+  them: pages go back to the free list and the slot is immediately
+  re-admittable.
+
+The engine is the host-side half of the contract: it owns block tables,
+lens and the free list (request-rate work); the device half is the
+jitted ``serve_step`` whose paged caches it donates back in every step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import kv_cache
+from repro.serve.step import make_prefill_step, make_serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new: int
+    t_submit: float = 0.0
+    t_first: float | None = None
+    t_done: float | None = None
+    tokens: list = dataclasses.field(default_factory=list)
+    token_times: list = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request | None = None
+    pages: list = dataclasses.field(default_factory=list)
+    length: int = 0  # tokens in cache (prompt + generated-so-far - 1)
+
+
+class ServingEngine:
+    """Paged continuous-batching engine for decoder-LM configs.
+
+    ``max_slots`` is the decode batch width; ``num_pages`` the shared
+    pool size (defaults to fully backing every slot at ``max_len`` —
+    pass something smaller to exercise admission control).
+    """
+
+    def __init__(self, params, cfg, *, max_slots: int = 4,
+                 max_len: int = 512, page_size: int = 16,
+                 num_pages: int | None = None, prefill_chunk: int = 64,
+                 dtype=jnp.float32, eos_id: int | None = None):
+        if not kv_cache.supports_paged(cfg):
+            raise NotImplementedError(
+                f"ServingEngine: {cfg.name} ({cfg.family}) has recurrent/"
+                "enc-dec caches — use the static loop")
+        from repro.models import transformer as tf
+
+        self.params, self.cfg = params, cfg
+        self.max_slots, self.max_len = max_slots, max_len
+        self.page_size, self.eos_id = page_size, eos_id
+        self.max_pp = kv_cache.pages_for(max_len, page_size)
+        caches = tf.init_caches(cfg, max_slots, max_len, dtype,
+                                cache_layout="paged", page_size=page_size,
+                                num_pages=num_pages)
+        self.blocks = caches["blocks"]
+        self.num_pages = next(iter(self.blocks[0].values())).shape[1]
+        self.allocator = kv_cache.PageAllocator(self.num_pages)
+        self.block_tables = np.full((max_slots, self.max_pp), -1, np.int32)
+        self.slots = [_Slot() for _ in range(max_slots)]
+        self._tf, self._dtype = tf, dtype
+        self._queue: list[Request] = []
+        self._done: list[Request] = []
+        self._next_rid = 0
+        self._prefill_chunk = prefill_chunk
+        # SWA rolling buffers can't absorb pad rows -> exact-shape path
+        self._dyn_prefill = not cfg.sliding_window
+        self._prefill = jax.jit(make_prefill_step(cfg, chunk=prefill_chunk),
+                                donate_argnums=(2,))
+        self._decode = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+        self._copy = jax.jit(kv_cache.write_prompt_pages, donate_argnums=(0,))
+        self.steps = 0
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, prompt, max_new: int) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        need = kv_cache.pages_for(len(prompt) + max_new, self.page_size)
+        # gate on the POOL too: with an undersubscribed pool a request
+        # that can never be admitted would block the FIFO queue forever
+        if (need > min(self.max_pp, self.num_pages)
+                or len(prompt) >= self.max_len):
+            raise ValueError(
+                f"prompt+max_new ({len(prompt)}+{max_new}) exceeds "
+                f"max_len {self.max_len} / pool of {self.num_pages} "
+                f"pages x {self.page_size}")
+        req = Request(self._next_rid, prompt, max_new,
+                      t_submit=time.perf_counter())
+        self._next_rid += 1
+        self._queue.append(req)
+        return req
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def active(self) -> int:
+        return sum(s.req is not None for s in self.slots)
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _pages_for_request(self, req: Request) -> int:
+        return kv_cache.pages_for(len(req.prompt) + req.max_new,
+                                  self.page_size)
+
+    def _admit(self) -> None:
+        """FIFO admission: fill free slots while the head-of-queue's
+        worst case fits in the free list (no skipping — later, shorter
+        requests never starve an earlier long one)."""
+        for slot_id, slot in enumerate(self.slots):
+            if not self._queue or slot.req is not None:
+                continue
+            need = self._pages_for_request(self._queue[0])
+            if not self.allocator.can_alloc(need):
+                break
+            req = self._queue.pop(0)
+            self._prefill_into(slot_id, slot, req,
+                               self.allocator.alloc(need))
+
+    def _prefill_into(self, slot_id, slot, req, pages) -> None:
+        n = len(req.prompt)
+        self.block_tables[slot_id, :] = -1
+        self.block_tables[slot_id, :len(pages)] = pages
+        # batch-1 dense prefill in the DYNAMIC-length contract: the
+        # prompt is right-padded to a chunk-granular bucket BEFORE the
+        # jit boundary and the real length rides as a traced scalar —
+        # one compile per bucket, not per distinct prompt length
+        t_pad = max(self._prefill_chunk,
+                    -(-n // self._prefill_chunk) * self._prefill_chunk)
+        if self._dyn_prefill:
+            prompt = np.zeros((1, t_pad), np.int32)
+            prompt[0, :n] = req.prompt
+            dense = self._tf.init_caches(self.cfg, 1, t_pad, self._dtype)
+            tok, dense = self._prefill(self.params, jnp.asarray(prompt),
+                                       dense, n_tokens=jnp.int32(n))
+        else:  # SWA: pad rows would shift the rolling buffer
+            dense = self._tf.init_caches(self.cfg, 1, t_pad, self._dtype)
+            tok, dense = self._prefill(self.params,
+                                       jnp.asarray(req.prompt)[None], dense)
+        # SWA dense prefill is a rolling buffer: row j holds logical
+        # position n - t_buf + j (ordered snapshot) — tell the copy
+        w = self.cfg.sliding_window
+        t_buf = min(t_pad, w) if w else t_pad
+        row0 = n - t_buf if (w and t_buf <= w) else 0
+        self.blocks = self._copy(self.blocks, dense["blocks"],
+                                 jnp.asarray(self.block_tables[slot_id]),
+                                 jnp.int32(n), jnp.int32(row0))
+        now = time.perf_counter()
+        req.t_first = now
+        req.tokens.append(int(tok[0]))
+        req.token_times.append(now)
+        slot.req, slot.pages, slot.length = req, pages, n
+        if self.eos_id is not None and req.tokens[-1] == self.eos_id:
+            req.max_new = len(req.tokens)  # eos at prefill: done already
+
+    def _retire(self, slot_id, slot) -> None:
+        req = slot.req
+        req.t_done = time.perf_counter()
+        self.allocator.free(slot.pages)
+        self.block_tables[slot_id, :] = -1
+        self._done.append(req)
+        slot.req, slot.pages, slot.length = None, [], 0
+
+    # -- the engine step ----------------------------------------------------
+
+    def step(self) -> int:
+        """Admit what fits, run one batched decode over the active
+        slots, retire what finished.  Returns tokens generated."""
+        # retire-before-admit: a request whose LAST token came from the
+        # previous step (or from prefill, max_new == 1) frees its pages
+        # for this step's admissions
+        for sid, slot in enumerate(self.slots):
+            if slot.req is not None and slot.req.done:
+                self._retire(sid, slot)
+        self._admit()
+        # max_new == 1 requests finish at prefill: retire before the
+        # decode so they don't produce an extra token
+        for sid, slot in enumerate(self.slots):
+            if slot.req is not None and slot.req.done:
+                self._retire(sid, slot)
+        if self.active == 0:
+            return 0
+
+        last = np.zeros((self.max_slots, 1), np.int32)
+        for sid, slot in enumerate(self.slots):
+            if slot.req is not None:
+                last[sid, 0] = slot.req.tokens[-1]
+        caches = {
+            "blocks": self.blocks,
+            "block_tables": jnp.asarray(self.block_tables),
+            "lens": jnp.asarray(
+                np.array([s.length for s in self.slots], np.int32)),
+        }
+        tok, caches = self._decode(self.params, jnp.asarray(last), caches)
+        self.blocks = caches["blocks"]
+        self.steps += 1
+        tok = np.asarray(tok)
+        now = time.perf_counter()
+        produced = 0
+        for sid, slot in enumerate(self.slots):
+            req = slot.req
+            if req is None:
+                continue
+            slot.length += 1
+            t = int(tok[sid, 0])
+            req.tokens.append(t)
+            req.token_times.append(now)
+            produced += 1
+            if self.eos_id is not None and t == self.eos_id:
+                req.max_new = len(req.tokens)  # truncate: eos ends it
+        return produced
+
+    def run(self, max_steps: int = 100_000) -> list[Request]:
+        """Drive steps until every submitted request has retired."""
+        for _ in range(max_steps):
+            if not self._queue and self.active == 0:
+                break
+            self.step()
+        # a trailing retire pass: the final step's completions
+        for sid, slot in enumerate(self.slots):
+            if slot.req is not None and slot.req.done:
+                self._retire(sid, slot)
+        if self._queue or self.active:
+            raise RuntimeError(
+                f"engine stalled: {len(self._queue)} queued, "
+                f"{self.active} active after {max_steps} steps")
+        done, self._done = self._done, []
+        return done
+
+
+def latency_stats(requests) -> dict:
+    """p50/p99 per-token latency + request latency over a finished
+    trace (seconds)."""
+    gaps, req_lat = [], []
+    for r in requests:
+        ts = [r.t_submit] + r.token_times
+        gaps += [b - a for a, b in zip(ts, ts[1:])]
+        req_lat.append(r.t_done - r.t_submit)
+    gaps.sort()
+
+    def pct(xs, p):
+        return xs[min(len(xs) - 1, int(p * len(xs)))]
+
+    return {
+        "tokens": sum(len(r.tokens) for r in requests),
+        "token_p50_s": pct(gaps, 0.50),
+        "token_p99_s": pct(gaps, 0.99),
+        "request_mean_s": sum(req_lat) / len(req_lat),
+    }

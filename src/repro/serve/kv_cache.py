@@ -1,0 +1,198 @@
+"""Paged KV cache: fixed-size pages, free-list allocator, block tables.
+
+The dense serving cache is one (B, max_len, ...) buffer per layer: every
+slot pays max_len whether it holds an 8-token or an 8k-token request, so
+one long request pins the memory of the whole batch.  The paged layout
+(vLLM-style) breaks each layer's cache into a shared pool of fixed-size
+**pages**:
+
+    k_pages / v_pages : (Hkv, num_pages, page_size, D)    (GQA)
+    kv_pages          : (1,   num_pages, page_size, r+dr) (MLA latent)
+
+A sequence owns an ordered **block table** of pool-page indices; logical
+position ``t`` lives at ``(block_table[t // page_size], t % page_size)``.
+Memory is allocated page-at-a-time from a host-side free list, so a
+retiring request's pages are immediately reusable by the next admission
+— what makes continuous batching (serve/engine.py) possible.
+
+MLA stores keys and values out of ONE pool: a pool row is
+``[c_kv | k_rope]`` (width r+dr); the paged kernel's ``dv=r`` reads the
+value ``c_kv`` as the row's leading columns — no sliced copy.
+
+Layer pools are kept as a python **list** (not stacked on a layer axis):
+the paged decode path is an unrolled per-layer loop, and a list lets
+each step update one layer's pool in place (donated buffers) without
+restacking — restacking would copy every pool every token.
+
+The allocator itself is plain python: page churn is request-rate work
+(admission / retirement), not token-rate work, so it stays host-side
+while the pools, block tables and lengths live on device inside the
+jitted decode step.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` cache rows."""
+    return -(-n_tokens // page_size)
+
+
+class PageAllocator:
+    """Free-list page allocator with exact accounting.
+
+    Pages are recycled LIFO so a retire-then-admit reuses hot pages.
+    ``alloc`` is all-or-nothing (raises before handing out a partial
+    set); ``free`` rejects double-frees and foreign pages — the
+    invariants the engine trace test leans on.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages <= 0:
+            raise ValueError(f"num_pages must be positive, got {num_pages}")
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, -1, -1))
+        self._live: set[int] = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_live(self) -> int:
+        return len(self._live)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n < 0:
+            raise ValueError(f"cannot alloc {n} pages")
+        if n > len(self._free):
+            raise MemoryError(
+                f"requested {n} pages, {len(self._free)} free "
+                f"of {self.num_pages}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._live.update(pages)
+        return pages
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if p not in self._live:
+                raise ValueError(f"page {p} is not allocated (double free?)")
+            self._live.remove(p)
+            self._free.append(p)
+
+
+# ---------------------------------------------------------------------------
+# pool construction
+# ---------------------------------------------------------------------------
+
+
+def supports_paged(cfg) -> bool:
+    """Paged serving covers the attention-cache families (GQA incl. SWA
+    via in-kernel window masking, and MLA).  Recurrent state (SSM /
+    hybrid) has O(1) per-sequence caches — nothing to page — and
+    enc-dec cross-KV is per-request anyway."""
+    return not (cfg.ssm_state or cfg.attn_every or cfg.is_enc_dec
+                or cfg.frontend)
+
+
+def _layer_pool(cfg, num_pages: int, page_size: int, dtype):
+    if cfg.uses_mla:
+        width = cfg.kv_lora_rank + cfg.rope_head_dim
+        return {"kv_pages": jnp.zeros((1, num_pages, page_size, width), dtype)}
+    return {
+        "k_pages": jnp.zeros(
+            (cfg.kv_heads, num_pages, page_size, cfg.head_dim), dtype),
+        "v_pages": jnp.zeros(
+            (cfg.kv_heads, num_pages, page_size, cfg.head_dim), dtype),
+    }
+
+
+def init_paged_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
+                      page_size: int = 16, num_pages: int | None = None):
+    """Paged serving caches for ``batch`` decode slots.
+
+    Returns {"blocks": [per-layer pool dict], "block_tables":
+    (B, pages_for(max_len)) int32 (-1 = unmapped), "lens": (B,) int32}.
+    ``num_pages`` defaults to full backing (every slot can reach
+    ``max_len``) — undersubscribe it to let the engine's admission
+    control do its job.
+    """
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"paged KV cache: unsupported family {cfg.family!r} "
+            "(recurrent/enc-dec/frontend caches are not paged)")
+    max_pp = pages_for(max_len, page_size)
+    if num_pages is None:
+        num_pages = batch * max_pp
+    return {
+        "blocks": [_layer_pool(cfg, num_pages, page_size, dtype)
+                   for _ in range(cfg.num_layers)],
+        "block_tables": jnp.full((batch, max_pp), -1, jnp.int32),
+        "lens": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def page_size_of(caches) -> int:
+    pool = caches["blocks"][0]
+    return next(iter(pool.values())).shape[2]
+
+
+# ---------------------------------------------------------------------------
+# prefill copy-in
+# ---------------------------------------------------------------------------
+
+
+def write_prompt_pages(paged_blocks, dense_blocks, block_row, n_tokens,
+                       row0_pos=0):
+    """Scatter one request's dense-prefill cache rows into its pages.
+
+    paged_blocks: the per-layer pool list from :func:`init_paged_caches`;
+    dense_blocks: the ``caches["blocks"]`` tree of a **batch-1** dense
+    cache after prefill — GQA {"k"/"v": (L, 1, T, Hkv, D)} or MLA
+    {"ckv": (L, 1, T, r), "k_rope": (L, 1, T, dr)}; block_row:
+    (pages_per_seq,) int32 page ids for this request; n_tokens: live
+    prompt length (traced ok).  ``row0_pos`` is the logical position of
+    dense row 0 — 0 for plain buffers, ``n_tokens - buffer_len`` for an
+    SWA rolling buffer (ordered snapshot: slot j holds position
+    ``len - t + j``).  Rows mapping outside [0, n_tokens) — pad rows,
+    unwritten rolling slots, -1 table tails — scatter out of bounds and
+    are dropped.  Pure function; the engine jits it with the pools
+    donated.
+    """
+    first = next(iter(paged_blocks[0].values()))
+    num_pages, pg = first.shape[1], first.shape[2]
+    mla = "kv_pages" in paged_blocks[0]
+    if mla:
+        dense_rows = jnp.concatenate(
+            [dense_blocks["ckv"], dense_blocks["k_rope"]], axis=-1
+        )[:, 0]  # (L, T, r+dr)
+        t = dense_rows.shape[1]
+    else:
+        t = dense_blocks["k"].shape[2]
+
+    pos = jnp.arange(t) + row0_pos  # logical position of each dense row
+    page = block_row[jnp.clip(pos // pg, 0, block_row.shape[0] - 1)]
+    valid = (pos >= 0) & (pos < n_tokens) & (page >= 0)
+    page = jnp.where(valid, page, num_pages)
+    slot = pos % pg
+
+    out = []
+    for li, pool in enumerate(paged_blocks):
+        if mla:
+            out.append({
+                "kv_pages": pool["kv_pages"].at[0, page, slot].set(
+                    dense_rows[li], mode="drop"),
+            })
+        else:
+            out.append({
+                "k_pages": pool["k_pages"].at[:, page, slot].set(
+                    dense_blocks["k"][li, 0].transpose(1, 0, 2), mode="drop"),
+                "v_pages": pool["v_pages"].at[:, page, slot].set(
+                    dense_blocks["v"][li, 0].transpose(1, 0, 2), mode="drop"),
+            })
+    return out

@@ -14,24 +14,105 @@ import jax.numpy as jnp
 from repro.models import encdec, transformer
 
 
+def _unpad_cache_len(caches, n_pad):
+    """Rewind every ``len`` counter past the right-pad of a ragged final
+    prefill chunk: the pad rows stay in the buffers but sit at/after
+    ``len``, so they are masked out of every later attend and
+    overwritten as decode proceeds."""
+    def fix(path, leaf):
+        if path and getattr(path[-1], "key", None) == "len":
+            return leaf - n_pad
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, caches)
+
+
 def make_prefill_step(cfg, chunk: int = 4096):
     """Chunked prefill (vLLM-style): prompts longer than ``chunk`` run as
     sequential chunk passes against the growing KV cache.  Bounds the
     attention/MoE working set at O(chunk) instead of O(prompt) — what
-    makes prefill_32k fit at 236B scale."""
+    makes prefill_32k fit at 236B scale.
 
-    def prefill_step(params, tokens, caches, embeds=None, frames=None):
+    Arbitrary prompt lengths are supported.  For attention caches the
+    final partial chunk is right-padded to ``chunk`` with masked
+    positions — logits read at the last real token (``logit_index``),
+    cache ``len`` counters rewound past the pad — so every chunk pass
+    jits at ONE shape.  Recurrent / rolling-buffer state (SSM, hybrid,
+    SWA) cannot absorb pad tokens (the pad would pollute the recurrence
+    or push real keys out of the window buffer), so those families run
+    the remainder as one exact-size pass instead.
+
+    ``n_tokens`` (traced scalar) flips to the DYNAMIC-length contract
+    the serving engine uses: ``tokens`` arrives already right-padded to
+    a bucketed static shape and only the first ``n_tokens`` are real —
+    the pad boundary then costs zero retraces, because it never touches
+    a static shape (logits select the real last position per chunk,
+    ``len`` rewinds by a traced amount).  Attention-cache families
+    only, no ``embeds``/enc-dec.
+    """
+    pad_ok = not (cfg.ssm_state or cfg.sliding_window)
+
+    def run_chunks(tokens, caches, apply_chunk):
+        """Drive ``apply_chunk(piece, caches, logit_index, i)`` over the
+        (possibly right-padded) chunk grid; returns (last_out, caches)."""
+        s = tokens.shape[1]
+        full, rem = divmod(s, chunk)
+        toks, n_pad = tokens, 0
+        if rem and pad_ok:
+            n_pad = chunk - rem
+            toks = jnp.pad(tokens, ((0, 0), (0, n_pad)))
+        out = None
+        n_chunks = toks.shape[1] // chunk
+        for i in range(n_chunks):
+            piece = jax.lax.dynamic_slice_in_dim(toks, i * chunk, chunk, 1)
+            li = rem - 1 if (n_pad and i == n_chunks - 1) else None
+            out, caches = apply_chunk(piece, caches, li, i)
+        if rem and not pad_ok:
+            out, caches = apply_chunk(tokens[:, full * chunk:], caches, None, n_chunks)
+        if n_pad:
+            caches = _unpad_cache_len(caches, n_pad)
+        return out, caches
+
+    def dynamic_prefill(params, tokens, caches, n_tokens):
+        """Right-padded tokens, traced real length: every chunk reads
+        its head at the clamped real-last position and the chunk that
+        actually contains token ``n_tokens - 1`` wins the select."""
+        assert pad_ok and not cfg.is_enc_dec, (
+            "dynamic-length prefill needs a pad-tolerant attention cache")
+        s = tokens.shape[1]
+        n = jnp.asarray(n_tokens, jnp.int32)
+        if s <= chunk:
+            logits, caches = transformer.prefill(params, cfg, tokens, caches,
+                                                 logit_index=n - 1)
+        else:
+            assert s % chunk == 0, (s, chunk)
+            logits = None
+            for i in range(s // chunk):
+                piece = jax.lax.dynamic_slice_in_dim(tokens, i * chunk, chunk, 1)
+                li = jnp.clip(n - 1 - i * chunk, 0, chunk - 1)
+                lg, caches = transformer.prefill(params, cfg, piece, caches,
+                                                 logit_index=li)
+                take = (n - 1) // chunk == i
+                logits = lg if logits is None else jnp.where(take, lg, logits)
+        caches = _unpad_cache_len(caches, s - n)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    def prefill_step(params, tokens, caches, embeds=None, frames=None,
+                     n_tokens=None):
+        if n_tokens is not None:
+            return dynamic_prefill(params, tokens, caches, n_tokens)
         s = tokens.shape[1]
         if cfg.is_enc_dec:
             if s <= chunk:
                 logits, caches, kv = encdec.prefill(params, cfg, frames, tokens, caches)
             else:
-                assert s % chunk == 0, (s, chunk)
                 enc_out = encdec.encode(params, cfg, frames)
                 kv = encdec.cross_kv(params, cfg, enc_out)
-                for i in range(s // chunk):
-                    piece = jax.lax.dynamic_slice_in_dim(tokens, i * chunk, chunk, 1)
-                    last_h, caches = _encdec_chunk(params, cfg, piece, caches, kv)
+                last_h, caches = run_chunks(
+                    tokens, caches,
+                    lambda piece, c, li, i: _encdec_chunk(
+                        params, cfg, piece, c, kv, logit_index=li))
                 # the LM head only matters after the final chunk
                 logits = _encdec_head(params, cfg, last_h)
             next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
@@ -39,29 +120,29 @@ def make_prefill_step(cfg, chunk: int = 4096):
         if s <= chunk:
             logits, caches = transformer.prefill(params, cfg, tokens, caches, embeds)
         else:
-            assert s % chunk == 0, (s, chunk)
-            for i in range(s // chunk):
-                piece = jax.lax.dynamic_slice_in_dim(tokens, i * chunk, chunk, 1)
-                logits, caches = transformer.prefill(
-                    params, cfg, piece, caches, embeds if i == 0 else None
-                )
+            logits, caches = run_chunks(
+                tokens, caches,
+                lambda piece, c, li, i: transformer.prefill(
+                    params, cfg, piece, c, embeds if i == 0 else None,
+                    logit_index=li))
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_tok, caches
 
     return prefill_step
 
 
-def _encdec_chunk(params, cfg, piece, caches, kv):
+def _encdec_chunk(params, cfg, piece, caches, kv, *, logit_index=None):
     """One decoder prefill chunk against precomputed cross K/V.
-    Returns (last-position hidden state, caches) — the head is applied
-    once, after the final chunk (``_encdec_head``)."""
+    Returns (hidden state at the chunk's last [real] position, caches)
+    — the head is applied once, after the final chunk (``_encdec_head``)."""
     from repro.models.layers import embedding_apply
 
     x = embedding_apply(params["embed"], piece)
     pos0 = caches["len"][0]
     positions = pos0 + jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
     x, caches = encdec._dec_stack(params, cfg, x, positions, kv, caches)
-    return x[:, -1:], caches
+    last = x[:, -1:] if logit_index is None else x[:, logit_index:logit_index + 1]
+    return last, caches
 
 
 def _encdec_head(params, cfg, last_h):
@@ -88,15 +169,21 @@ def make_serve_step(cfg):
 
 def generate(params, cfg, prompt, max_new: int, max_len: int, dtype=jnp.bfloat16,
              frames=None, embeds=None):
-    """Simple greedy generation loop (examples/tests; not the dry-run)."""
+    """Simple greedy generation loop (examples/tests; not the dry-run).
+
+    The prefill/decode steps are jitted with the caches DONATED: each
+    step aliases the KV buffers in place instead of copying the full
+    cache per token (donation is a no-op on backends without buffer
+    aliasing, e.g. CPU — jax just warns).
+    """
     b = prompt.shape[0]
     caches = (
         encdec.init_caches(cfg, b, max_len, dtype)
         if cfg.is_enc_dec
         else transformer.init_caches(cfg, b, max_len, dtype)
     )
-    prefill = make_prefill_step(cfg)
-    step = make_serve_step(cfg)
+    prefill = jax.jit(make_prefill_step(cfg), donate_argnums=(2,))
+    step = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
     kv = None
     if cfg.is_enc_dec:
         tok, caches, kv = prefill(params, prompt, caches, frames=frames)

@@ -153,7 +153,8 @@ class TestCompression:
 
     def test_int8_payload_is_8x_smaller(self):
         params = {"w": jnp.zeros((1000,), jnp.float32)}
-        assert Int8Compressor.payload_bytes(params) == 1000  # vs 4000 f32
+        # 1000 int8 + one f32 scale per leaf, vs 4000 f32
+        assert Int8Compressor.payload_bytes(params) == 1004
 
     def test_topk_keeps_largest(self):
         comp = TopKCompressor(fraction=0.1)
