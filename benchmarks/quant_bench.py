@@ -1,0 +1,172 @@
+"""Quantized serving benchmark: int8 KV at equal pool BYTES + GEMM table.
+
+Two runs of the PR-4 mixed-length Poisson trace through the continuous-
+batching engine, SAME model, SAME jitted step shapes, SAME pool byte
+budget — only the KV pool precision differs:
+
+* **f32**  — the byte budget buys few pages, so admission serializes:
+  requests queue behind the free list even though decode slots idle;
+* **int8** — ~4x the pages for the same bytes
+  (``kv_cache.page_bytes``), so the same budget admits ~4x the
+  concurrent sequences and the occupancy gap converts straight into
+  token throughput (the ISSUE-5 acceptance floor is >=1.3x; the
+  structural ratio measures well above it).
+
+The budget is sized so the f32 pool covers roughly ONE in-flight
+request (the long-generation tail of the 3:1 trace) while int8 covers
+the full slot grid — the regime where halving/quartering KV bytes is
+the difference between batched and serialized serving.
+
+A second section reports the VTA GEMM's arithmetic-intensity table
+(MAC/B) for the int8 fused-dequant path vs the equivalent f32 GEMM's
+byte traffic — the roofline story behind the weight-quantized
+projections (EXPERIMENTS.md §Quantization).
+
+An accuracy gate runs first: int8-KV greedy decode must track the f32
+engine's tokens on the gate trace (quantization noise may flip a
+near-tied greedy pick, so the gate is a >= 90% token-match floor plus
+exact request accounting).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.serving_bench import (
+    ARRIVAL_MEAN_S,
+    MODEL_KW,
+    N_REQUESTS,
+    PAGE,
+    PROMPT,
+    SLOTS,
+    _continuous_pass,
+)
+from repro.configs.base import get_config
+from repro.models import transformer as tf
+from repro.serve import kv_cache
+from repro.serve.engine import ServingEngine, latency_stats
+
+MAX_LEN = 256
+#: pool byte budget: ~6 f32 pages == one worst-case long request
+#: (pages_for(32 + 46, 16) == 5), so f32 serving degenerates to ~1
+#: request in flight while int8 (~24 pages) keeps every slot busy
+BUDGET_F32_PAGES = 6
+#: the PR-4 trace's Poisson arrivals with a decode-heavier 3:1 mix —
+#: the admission-concurrency gap only shows in DECODE steps (prefill is
+#: serialized either way), so generations long enough to reach steady
+#: state keep the measured ratio structural rather than prefill noise
+NEW_MIX = [8, 12, 8, 46]
+
+
+def _trace(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    t, reqs = 0.0, []
+    for i in range(N_REQUESTS):
+        t += rng.exponential(ARRIVAL_MEAN_S)
+        prompt = rng.integers(0, cfg.vocab, (PROMPT,)).astype(np.int32)
+        reqs.append((t, prompt, NEW_MIX[i % len(NEW_MIX)]))
+    return reqs
+
+
+def _run(params, cfg, reqs, kv_dtype, pool_bytes):
+    eng = ServingEngine(params, cfg, max_slots=SLOTS, max_len=MAX_LEN,
+                        page_size=PAGE, prefill_chunk=PROMPT,
+                        kv_dtype=kv_dtype, pool_bytes=pool_bytes)
+    free0 = eng.allocator.num_free
+    _continuous_pass(eng, reqs[:SLOTS])  # compile
+    done, dt, steps = _continuous_pass(eng, reqs)
+    assert eng.allocator.num_free == free0, "page leak"
+    return done, dt, steps, eng
+
+
+def _accuracy_gate(params, cfg):
+    """int8 KV must track f32 greedy tokens on the gate trace."""
+    rng = np.random.default_rng(7)
+    reqs = [(rng.integers(0, cfg.vocab, (PROMPT,)).astype(np.int32), m)
+            for m in (4, 8, 6)]
+    toks = {}
+    for kd in ("f32", "int8"):
+        eng = ServingEngine(params, cfg, max_slots=2, max_len=MAX_LEN,
+                            page_size=PAGE, prefill_chunk=PROMPT,
+                            kv_dtype=kd)
+        for p, m in reqs:
+            eng.submit(p, m)
+        toks[kd] = {r.rid: r.tokens for r in eng.run()}
+    total = sum(m for _, m in reqs)
+    match = sum(a == b
+                for rid in toks["f32"]
+                for a, b in zip(toks["f32"][rid], toks["int8"][rid]))
+    assert all(len(toks["int8"][r]) == m for r, (_, m) in enumerate(reqs))
+    assert match >= 0.9 * total, (match, total)
+    return match, total
+
+
+def _gemm_table():
+    """Arithmetic-intensity rows: int8 fused-dequant GEMM vs f32 bytes."""
+    rows = []
+    for m, k, n in ((128, 256, 256), (256, 512, 512)):
+        macs = m * k * n
+        int8_bytes = m * k + k * n + 4 * n + 4 * m * n  # a + w + scale + f32 out
+        f32_bytes = 4 * (m * k + k * n + m * n)
+        rows.append((m, k, n, macs / int8_bytes, macs / f32_bytes))
+    return rows
+
+
+def main():
+    cfg = get_config("qwen3_0p6b").scaled_down(**MODEL_KW)
+    params = tf.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    reqs = _trace(cfg)
+    results = []
+
+    match, total = _accuracy_gate(params, cfg)
+    print(f"accuracy gate: int8 KV matches f32 greedy on {match}/{total} "
+          f"tokens (>= 90% floor)")
+    results.append(("quant_kv_accuracy", 0.0, f"match={match}/{total}"))
+
+    budget = BUDGET_F32_PAGES * kv_cache.page_bytes(cfg, PAGE, "f32")
+    stats = {}
+    for kd in ("f32", "int8"):
+        done, dt, steps, eng = _run(params, cfg, reqs, kd, budget)
+        st = latency_stats(done)
+        tps = st["tokens"] / dt
+        stats[kd] = tps
+        print(f"{kd:>5}: {st['tokens']} tokens in {dt*1e3:.0f} ms "
+              f"({tps:.0f} tok/s over {steps} steps; pool {eng.num_pages} "
+              f"pages = {eng.pool_bytes/2**10:.0f} KiB of "
+              f"{budget/2**10:.0f} KiB budget; "
+              f"p99 {st['token_p99_s']*1e3:.1f} ms)")
+        results.append((
+            f"quant_serving_{kd}", dt / st["tokens"] * 1e6,
+            f"tok_s={tps:.0f};pages={eng.num_pages};"
+            f"pool_kib={eng.pool_bytes/2**10:.0f};"
+            f"p99_ms={st['token_p99_s']*1e3:.1f}"))
+
+    speedup = stats["int8"] / stats["f32"]
+    print(f"speedup: {speedup:.2f}x token throughput at equal pool bytes "
+          f"(int8 pages admit ~4x the sequences)")
+    assert speedup >= 1.3, (
+        f"int8 KV must land >=1.3x f32 throughput at equal pool bytes, "
+        f"got {speedup:.2f}x")
+    results.append(("quant_kv_equal_bytes_speedup", 0.0,
+                    f"ratio={speedup:.2f}"))
+
+    print("\nGEMM MAC/B (fused dequant epilogue vs f32 traffic):")
+    for m, k, n, i8, f32 in _gemm_table():
+        print(f"  {m}x{k}x{n}: int8 {i8:.0f} MAC/B vs f32 {f32:.0f} MAC/B "
+              f"({i8/f32:.1f}x)")
+        results.append((f"quant_gemm_{m}x{k}x{n}", 0.0,
+                        f"int8_mac_b={i8:.0f};f32_mac_b={f32:.0f};"
+                        f"gain={i8/f32:.1f}"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, der in results:
+        print(f"{name},{us:.1f},{der}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -6,10 +6,12 @@ writes the same rows machine-readably to ``BENCH_kernels.json``
 (``pipeline_bench`` rows go to ``BENCH_pipeline.json``) so CI can
 archive the per-PR perf trajectory.
 
-``--only mod1,mod2`` restricts to a subset (CI smoke runs
+``--only mod1,mod2`` restricts to a subset (unknown names fail fast;
+``--list`` prints the registry).  CI smoke runs
 ``--only kernel_bench,attn_bench`` and, under 4 fake devices,
-``--only pipeline_bench`` and ``--only serving_bench`` —
-``serving_bench`` rows go to ``BENCH_serving.json``).
+``--only pipeline_bench``, ``--only serving_bench`` and
+``--only quant_bench`` — their rows go to ``BENCH_serving.json`` /
+``BENCH_pipeline.json`` / ``BENCH_quant.json``.
 """
 
 from __future__ import annotations
@@ -23,8 +25,10 @@ import traceback
 BENCH_JSON = "BENCH_kernels.json"
 PIPELINE_JSON = "BENCH_pipeline.json"
 SERVING_JSON = "BENCH_serving.json"
+QUANT_JSON = "BENCH_quant.json"
 #: modules whose rows are archived separately from the kernel JSON
-_SPLIT_JSON = {"pipeline_bench": PIPELINE_JSON, "serving_bench": SERVING_JSON}
+_SPLIT_JSON = {"pipeline_bench": PIPELINE_JSON, "serving_bench": SERVING_JSON,
+               "quant_bench": QUANT_JSON}
 
 
 def _capture(mod_main):
@@ -65,7 +69,11 @@ def main(argv=None) -> None:
     parser = argparse.ArgumentParser(prog="benchmarks.run")
     parser.add_argument(
         "--only", default="",
-        help="comma-separated module subset (e.g. kernel_bench,attn_bench)")
+        help="comma-separated module subset (e.g. kernel_bench,attn_bench); "
+             "unknown names abort before anything runs")
+    parser.add_argument(
+        "--list", action="store_true",
+        help="print the registered benchmark modules and exit")
     args = parser.parse_args(argv)
 
     from benchmarks import (
@@ -76,6 +84,7 @@ def main(argv=None) -> None:
         kernel_bench,
         pipeline_bench,
         power,
+        quant_bench,
         serving_bench,
         strategy_tpu,
     )
@@ -90,6 +99,7 @@ def main(argv=None) -> None:
         ("attn_bench", attn_bench.main),
         ("pipeline_bench", pipeline_bench.main),
         ("serving_bench", serving_bench.main),
+        ("quant_bench", quant_bench.main),
         ("strategy_tpu", strategy_tpu.main),
         ("power", power.main),
     ]
@@ -99,11 +109,21 @@ def main(argv=None) -> None:
         from benchmarks import roofline
         modules.append(("roofline", roofline.main))
 
+    if args.list:
+        for name, _ in modules:
+            dest = _SPLIT_JSON.get(name, BENCH_JSON)
+            print(f"{name:28s} -> {dest}")
+        if not os.path.exists("dryrun_results.jsonl"):
+            print("roofline                     (needs dryrun_results.jsonl)")
+        return
+
     if args.only:
         wanted = {m.strip() for m in args.only.split(",") if m.strip()}
         unknown = wanted - {name for name, _ in modules}
         if unknown:
-            raise SystemExit(f"unknown benchmark modules: {sorted(unknown)}")
+            raise SystemExit(
+                f"unknown benchmark modules: {sorted(unknown)} "
+                f"(see --list)")
         modules = [(name, fn) for name, fn in modules if name in wanted]
 
     failed = []

@@ -207,6 +207,13 @@ def main():
         "serving_paged_continuous", ct_dt / stats["tokens"] * 1e6,
         f"tok_s={ct_tps:.0f};p50_ms={stats['token_p50_s']*1e3:.2f};"
         f"p99_ms={stats['token_p99_s']*1e3:.1f};pages={eng.num_pages}"))
+    # tail latency as first-class NUMERIC rows, so the per-PR JSON
+    # trajectory tracks p50/p99 token latency alongside throughput
+    results.append(("serving_token_p50", stats["token_p50_s"] * 1e6,
+                    f"tok_s={ct_tps:.0f}"))
+    results.append(("serving_token_p99", stats["token_p99_s"] * 1e6,
+                    f"tok_s={ct_tps:.0f};"
+                    f"req_mean_ms={stats['request_mean_s']*1e3:.1f}"))
 
     speedup = ct_tps / st_tps
     print(f"speedup   : {speedup:.2f}x token throughput "

@@ -52,13 +52,19 @@ DEFAULT_BLOCK_K = 512
 
 def _split_kv_partition(
     q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, cnt_ref, *,
-    kvlen, k_lo, kc, window, scale,
+    kvlen, k_lo, kc, window, scale, k_scale=None, v_scale=None,
 ):
     """One KV partition of a split-KV decode step: emit the unnormalized
     partial output plus (m, l) online-softmax statistics, or neutral
     statistics when the partition lies at/after ``kvlen`` (or fully
     outside the sliding window).  Shared by the dense and paged kernels —
-    they differ only in where ``kvlen`` and the K/V panel come from."""
+    they differ only in where ``kvlen`` and the K/V panel come from.
+
+    ``k_scale``/``v_scale`` (traced scalars) dequantize an int8 page
+    right after its DMA: because the scale is per PAGE (== partition),
+    it folds into the logits as one scalar multiplier after the QK dot
+    and into the partial output after the PV dot — the dequantized f32
+    panel never exists outside this partition's registers."""
     q_pos = kvlen - 1  # the decoded token is the newest cache entry
 
     executed = k_lo < kvlen
@@ -72,10 +78,14 @@ def _split_kv_partition(
     def _partition():
         q = q_ref[...].reshape(q_ref.shape[-2], q_ref.shape[-1])  # (G, D)
         k = k_ref[...].reshape(kc, k_ref.shape[-1])
+        if k_scale is not None:
+            k = k.astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         ) * scale  # (G, kc)
+        if k_scale is not None:
+            s = s * k_scale
 
         cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         mask = cols < kvlen
@@ -85,10 +95,15 @@ def _split_kv_partition(
 
         m = jnp.max(s, axis=1, keepdims=True)  # (G, 1)
         p = jnp.exp(s - m)
-        o_ref[...] = jax.lax.dot(
-            p.astype(v_ref.dtype), v_ref[...].reshape(kc, v_ref.shape[-1]),
-            preferred_element_type=jnp.float32,
-        ).reshape(o_ref.shape)
+        v = v_ref[...].reshape(kc, v_ref.shape[-1])
+        if v_scale is not None:
+            pv = jax.lax.dot(
+                p, v.astype(jnp.float32), preferred_element_type=jnp.float32,
+            ) * v_scale
+        else:
+            pv = jax.lax.dot(
+                p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        o_ref[...] = pv.reshape(o_ref.shape)
         m_ref[...] = m.reshape(m_ref.shape)
         l_ref[...] = jnp.sum(p, axis=1, keepdims=True).reshape(l_ref.shape)
 
@@ -226,14 +241,31 @@ def decode_partition_counts(t: int, kv_len: int, *,
 
 
 def _paged_kernel(
-    btref, lref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *refs,
-    pg, window, scale, with_counts,
+    *refs, pg, window, scale, with_counts, quantized, num_pages, max_pp,
 ):
-    cnt_ref = refs[0] if with_counts else None
-    ib, ip = pl.program_id(0), pl.program_id(2)
+    if quantized:
+        btref, lref, ksref, vsref = refs[:4]
+        refs = refs[4:]
+    else:
+        btref, lref = refs[:2]
+        refs = refs[2:]
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref = refs[:6]
+    cnt_ref = refs[6] if with_counts else None
+    ib, ih, ip = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    kvlen = lref[ib]
+    k_scale = v_scale = None
+    if quantized:
+        # the page this partition's DMA presented (same clamp as the
+        # index map) picks its scale off the scalar-prefetch channel
+        first, last = _live_page_range(kvlen, pg=pg, window=window)
+        page = btref[ib * max_pp + jnp.clip(ip, first, last)]
+        page = jnp.clip(page, 0, num_pages - 1)
+        k_scale = ksref[ih * num_pages + page]
+        v_scale = vsref[ih * num_pages + page]
     _split_kv_partition(
         q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, cnt_ref,
-        kvlen=lref[ib], k_lo=ip * pg, kc=pg, window=window, scale=scale)
+        kvlen=kvlen, k_lo=ip * pg, kc=pg, window=window, scale=scale,
+        k_scale=k_scale, v_scale=v_scale)
 
 
 def _live_page_range(kvlen, *, pg, window):
@@ -255,6 +287,8 @@ def paged_decode_attention(
     window: int = 0,
     scale: float | None = None,
     dv: int | None = None,
+    k_scales=None,
+    v_scales=None,
     interpret: bool = False,
     return_counts: bool = False,
 ):
@@ -275,7 +309,14 @@ def paged_decode_attention(
     ONE pool without materializing a sliced copy.  One partition == one
     page; partitions outside a sequence's [window, kv_len) range are
     skipped under ``pl.when`` with their DMA clamped onto the last live
-    page.  Returns (B, 1, H, dv) [+ (B, Hkv, P) execution map].
+    page.
+
+    **int8 pools**: pass ``k_scales``/``v_scales`` (Hkv, num_pages) f32
+    per-page-per-head scales (kv_cache.py writes them) — they ride the
+    scalar-prefetch channel next to the block table, and each partition
+    dequantizes its page right after the DMA.  MLA's shared pool passes
+    the SAME array for both.  Returns (B, 1, H, dv)
+    [+ (B, Hkv, P) execution map].
     """
     b, s, h, d = q.shape
     assert s == 1, f"paged_decode_attention is an S=1 kernel, got S={s}"
@@ -285,12 +326,19 @@ def paged_decode_attention(
     dv = v_pages.shape[-1] if dv is None else dv
     scale = scale if scale is not None else d ** -0.5
     max_pp = block_tables.shape[1]
+    quantized = k_pages.dtype == jnp.int8
+    assert quantized == (k_scales is not None) == (v_scales is not None), \
+        "int8 pools need k_scales AND v_scales; float pools must not pass them"
 
     q3 = q.reshape(b, hkv, g, d)
     bt_flat = block_tables.reshape(-1).astype(jnp.int32)
     lens = jnp.asarray(kv_lens, jnp.int32)
+    scalars = [bt_flat, lens]
+    if quantized:
+        scalars += [k_scales.reshape(-1).astype(jnp.float32),
+                    v_scales.reshape(-1).astype(jnp.float32)]
 
-    def kv_index(ib, ih, ip, btref, lref):
+    def kv_index(ib, ih, ip, btref, lref, *_):
         # dead partitions re-present the sequence's last live page: the
         # block table is the DMA descriptor, -1 tails never dereference
         first, last = _live_page_range(lref[ib], pg=pg, window=window)
@@ -298,9 +346,9 @@ def paged_decode_attention(
         return ih, jnp.clip(page, 0, num_pages - 1), 0, 0
 
     out_specs = [
-        pl.BlockSpec((1, 1, 1, g, dv), lambda ib, ih, ip, bt, l: (ib, ih, ip, 0, 0)),
-        pl.BlockSpec((1, 1, 1, g), lambda ib, ih, ip, bt, l: (ib, ih, ip, 0)),
-        pl.BlockSpec((1, 1, 1, g), lambda ib, ih, ip, bt, l: (ib, ih, ip, 0)),
+        pl.BlockSpec((1, 1, 1, g, dv), lambda ib, ih, ip, *_: (ib, ih, ip, 0, 0)),
+        pl.BlockSpec((1, 1, 1, g), lambda ib, ih, ip, *_: (ib, ih, ip, 0)),
+        pl.BlockSpec((1, 1, 1, g), lambda ib, ih, ip, *_: (ib, ih, ip, 0)),
     ]
     out_shape = [
         jax.ShapeDtypeStruct((b, hkv, max_pp, g, dv), jnp.float32),
@@ -309,14 +357,14 @@ def paged_decode_attention(
     ]
     if return_counts:
         out_specs.append(
-            pl.BlockSpec((1, 1, 1), lambda ib, ih, ip, bt, l: (ib, ih, ip)))
+            pl.BlockSpec((1, 1, 1), lambda ib, ih, ip, *_: (ib, ih, ip)))
         out_shape.append(jax.ShapeDtypeStruct((b, hkv, max_pp), jnp.int32))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=len(scalars),
         grid=(b, hkv, max_pp),
         in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ip, bt, l: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ip, *_: (ib, ih, 0, 0)),
             pl.BlockSpec((1, 1, pg, d), kv_index),
             pl.BlockSpec((1, 1, pg, dv), kv_index),
         ],
@@ -324,14 +372,15 @@ def paged_decode_attention(
     )
     res = pl.pallas_call(
         functools.partial(_paged_kernel, pg=pg, window=window, scale=scale,
-                          with_counts=return_counts),
+                          with_counts=return_counts, quantized=quantized,
+                          num_pages=num_pages, max_pp=max_pp),
         grid_spec=grid_spec,
         out_shape=out_shape,
         compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(bt_flat, lens, q3, k_pages, v_pages)
+    )(*scalars, q3, k_pages, v_pages)
     out = _combine_partitions(*res[:3]).reshape(b, 1, h, dv).astype(q.dtype)
     if return_counts:
         return out, res[3]

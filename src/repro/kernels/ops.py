@@ -65,18 +65,24 @@ def dense_int8(
     a: jax.Array,
     w: jax.Array,
     scale: jax.Array,
+    bias: jax.Array | None = None,
     *,
+    act: str | None = None,
     preset: str = "table1",
     interpret: bool = False,
+    **block_overrides,
 ) -> jax.Array:
-    """Quantized dense layer with fused f32 dequant epilogue."""
-    blocks = BLOCK_PRESETS[preset]
+    """Quantized dense layer with the fused dequant->bias->act epilogue
+    (the serving-path GEMM: dequantized f32 never round-trips HBM)."""
+    blocks = dict(BLOCK_PRESETS[preset], **block_overrides)
     m, k = a.shape
     _, n = w.shape
     ap = _pad_to(_pad_to(a, blocks["block_m"], 0), blocks["block_k"], 1)
     wp = _pad_to(_pad_to(w, blocks["block_k"], 0), blocks["block_n"], 1)
     sp = _pad_to(scale, blocks["block_n"], 0)
-    out = vta_gemm(ap, wp, scale=sp, epilogue="dequant", interpret=interpret, **blocks)
+    bp = None if bias is None else _pad_to(bias, blocks["block_n"], 0)
+    out = vta_gemm(ap, wp, bias=bp, scale=sp, epilogue="dequant", act=act,
+                   interpret=interpret, **blocks)
     return out[:m, :n]
 
 

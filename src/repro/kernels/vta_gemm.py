@@ -88,10 +88,27 @@ def _gemm_epilogue_kernel(
         out_ref[...] = jnp.clip(acc, -128, 127).astype(jnp.int8)
 
 
+def _apply_act(y, act):
+    """Static-act epilogue nonlinearity (f32 in, f32 out)."""
+    if act is None or act == "none":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "silu":
+        return jax.nn.silu(y)
+    if act == "gelu":
+        return jax.nn.gelu(y)
+    raise ValueError(f"unknown epilogue act {act!r}")
+
+
 def _gemm_dequant_kernel(
-    a_ref, w_ref, scale_ref, out_ref, acc_ref, *, n_k: int
+    a_ref, w_ref, scale_ref, *refs, n_k: int, act, with_bias: bool
 ):
-    """GEMM + f32 per-output-channel dequantization (serving path)."""
+    """GEMM + f32 per-output-channel dequant -> bias -> activation
+    (serving path): the whole int8-GEMM epilogue is one kernel, so the
+    f32 pre-activation never round-trips through HBM."""
+    bias_ref = refs[0] if with_bias else None
+    out_ref, acc_ref = refs[1 if with_bias else 0:]
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -106,18 +123,21 @@ def _gemm_dequant_kernel(
 
     @pl.when(k == n_k - 1)
     def _store():
-        out_ref[...] = acc_ref[...].astype(jnp.float32) * scale_ref[...]
+        y = acc_ref[...].astype(jnp.float32) * scale_ref[...]
+        if with_bias:
+            y = y + bias_ref[...]
+        out_ref[...] = _apply_act(y, act)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("block_m", "block_n", "block_k", "epilogue", "shift",
-                     "relu", "interpret"),
+                     "relu", "act", "interpret"),
 )
 def vta_gemm(
     a: jax.Array,  # (M, K) int8
     w: jax.Array,  # (K, N) int8
-    bias: jax.Array | None = None,  # (N,) int32   [epilogue="requant"]
+    bias: jax.Array | None = None,  # (N,) int32 [requant] / f32 [dequant]
     scale: jax.Array | None = None,  # (N,) f32    [epilogue="dequant"]
     *,
     block_m: int = 128,
@@ -126,6 +146,7 @@ def vta_gemm(
     epilogue: str = "none",  # none | requant | dequant
     shift: int = 8,
     relu: bool = True,
+    act: str | None = None,  # dequant epilogue: none | relu | silu | gelu
     interpret: bool = False,
 ) -> jax.Array:
     """Blocked VTA GEMM.  M/N/K must be multiples of the block sizes
@@ -175,14 +196,21 @@ def vta_gemm(
     if epilogue == "dequant":
         assert scale is not None
         scale2d = jnp.broadcast_to(scale[None, :], (1, n))
-        scale_spec = pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j))
+        row_spec = pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j))
+        in_specs = [a_spec, w_spec, row_spec]
+        operands = [a, w, scale2d]
+        if bias is not None:
+            in_specs.append(row_spec)
+            operands.append(
+                jnp.broadcast_to(bias.astype(jnp.float32)[None, :], (1, n)))
         return pl.pallas_call(
-            functools.partial(_gemm_dequant_kernel, n_k=n_k),
+            functools.partial(_gemm_dequant_kernel, n_k=n_k, act=act,
+                              with_bias=bias is not None),
             out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-            in_specs=[a_spec, w_spec, scale_spec],
+            in_specs=in_specs,
             out_specs=out_spec,
             **common,
-        )(a, w, scale2d)
+        )(*operands)
     raise ValueError(f"unknown epilogue {epilogue!r}")
 
 

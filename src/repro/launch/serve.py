@@ -32,7 +32,7 @@ def _run_paged_engine(params, cfg, args):
     max_len = args.prompt + args.new_tokens
     eng = ServingEngine(
         params, cfg, max_slots=args.batch, max_len=max_len,
-        page_size=args.page_size,
+        page_size=args.page_size, kv_dtype=args.kv_dtype,
         prefill_chunk=max(16, args.prompt // 4))
     rng = jax.random.PRNGKey(1)
     # mixed-length trace: prompts at the configured length, generation
@@ -51,7 +51,8 @@ def _run_paged_engine(params, cfg, args):
           f"({stats['tokens']/dt:.0f} tok/s)")
     print(f"  token latency p50 {stats['token_p50_s']*1e3:.1f} ms, "
           f"p99 {stats['token_p99_s']*1e3:.1f} ms; "
-          f"pool {eng.num_pages} pages x {args.page_size} slots")
+          f"pool {eng.num_pages} pages x {args.page_size} slots "
+          f"({eng.kv_dtype}, {eng.pool_bytes/2**10:.0f} KiB)")
 
 
 def main(argv=None):
@@ -66,6 +67,11 @@ def main(argv=None):
                     help="static: one fixed batch to completion; paged: "
                          "continuous batching over the paged KV cache")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--kv-dtype", choices=["f32", "bf16", "int8"],
+                    default="f32",
+                    help="paged-engine pool precision; int8 stores "
+                         "quarter-size pages + per-page scales, so the "
+                         "same pool bytes admit ~4x the sequences")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)

@@ -55,6 +55,17 @@ FLASH_MIN_SEQ = 512
 # ---------------------------------------------------------------------------
 
 
+def _w(p):
+    """Weight of a dense dict for einsum-shaped uses (MLA weight
+    absorption): quantized params materialize the f32 dequant on the
+    fly — the stored leaf stays int8; f32 params pass through as-is."""
+    if "qw" in p:
+        from repro.optim.quant import dequant_int8
+
+        return dequant_int8(p["qw"], p["qscale"])
+    return p["w"]
+
+
 def _paged_token_coords(cache, pool_key):
     """Where this step's token lands in the pool, per slot.
 
@@ -137,13 +148,28 @@ def gqa_apply(p, cfg, x, positions, cache=None, *, bidirectional=False):
         # through the block table (O(own kv_len) per sequence)
         assert s == 1, f"paged GQA cache is decode-only, got S={s}"
         page, slot, new_len = _paged_token_coords(cache, "k_pages")
-        kp = cache["k_pages"].at[:, page, slot].set(
-            k[:, 0].transpose(1, 0, 2), mode="drop")
-        vp = cache["v_pages"].at[:, page, slot].set(
-            v[:, 0].transpose(1, 0, 2), mode="drop")
-        out = paged_decode_attend(q, kp, vp, cache["block_tables"], new_len,
-                                  window=cfg.sliding_window)
-        new_cache = {"k_pages": kp, "v_pages": vp}
+        if cache["k_pages"].dtype == jnp.int8:
+            from repro.serve.kv_cache import quant_page_update
+
+            kp, ksc = quant_page_update(
+                cache["k_pages"], cache["k_scales"], page, slot,
+                k[:, 0].transpose(1, 0, 2))
+            vp, vsc = quant_page_update(
+                cache["v_pages"], cache["v_scales"], page, slot,
+                v[:, 0].transpose(1, 0, 2))
+            out = paged_decode_attend(
+                q, kp, vp, cache["block_tables"], new_len,
+                window=cfg.sliding_window, k_scales=ksc, v_scales=vsc)
+            new_cache = {"k_pages": kp, "v_pages": vp,
+                         "k_scales": ksc, "v_scales": vsc}
+        else:
+            kp = cache["k_pages"].at[:, page, slot].set(
+                k[:, 0].transpose(1, 0, 2), mode="drop")
+            vp = cache["v_pages"].at[:, page, slot].set(
+                v[:, 0].transpose(1, 0, 2), mode="drop")
+            out = paged_decode_attend(q, kp, vp, cache["block_tables"],
+                                      new_len, window=cfg.sliding_window)
+            new_cache = {"k_pages": kp, "v_pages": vp}
     else:
         t = cache["k"].shape[1]
         cur = cache["len"]
@@ -283,7 +309,7 @@ def _mla_absorbed_q(p, cfg, q_nope, q_rope):
     h, dn = q_nope.shape[2], q_nope.shape[3]
     r = cfg.kv_lora_rank
     q_lat = jnp.einsum("bshd,rhd->bshr", q_nope,
-                       p["wuk"]["w"].reshape(r, h, dn))
+                       _w(p["wuk"]).reshape(r, h, dn))
     q = jnp.concatenate([q_lat, q_rope], axis=-1)
     return hint(q, DP, None, MDL, None)
 
@@ -293,7 +319,7 @@ def _mla_up_project(p, cfg, out_lat):
     b, s, h, r = out_lat.shape
     dv = cfg.mla_v_head_dim
     out = jnp.einsum("bshr,rhd->bshd", out_lat,
-                     p["wuv"]["w"].reshape(r, h, dv))
+                     _w(p["wuv"]).reshape(r, h, dv))
     return out.reshape(b, s, h * dv)
 
 
@@ -314,15 +340,17 @@ def _mla_attend_absorbed(p, cfg, q_nope, q_rope, ckv, k_rope, *, kv_len):
 
 
 def _mla_attend_absorbed_paged(p, cfg, q_nope, q_rope, pool, block_tables,
-                               kv_lens):
+                               kv_lens, scales=None):
     """Paged twin of ``_mla_attend_absorbed``: pool rows are
     ``[c_kv | k_rope]``, so the pool serves as BOTH key and value pages
-    — ``dv=r`` reads the value c_kv as each row's leading columns."""
+    — ``dv=r`` reads the value c_kv as each row's leading columns (an
+    int8 pool's per-page ``scales`` serve both sides the same way)."""
     dn, dr = cfg.mla_head_dim, cfg.rope_head_dim
     q = _mla_absorbed_q(p, cfg, q_nope, q_rope)
     out_lat = paged_decode_attend(q, pool, pool, block_tables, kv_lens,
                                   scale=(dn + dr) ** -0.5,
-                                  dv=cfg.kv_lora_rank)
+                                  dv=cfg.kv_lora_rank,
+                                  k_scales=scales, v_scales=scales)
     return _mla_up_project(p, cfg, out_lat)
 
 
@@ -338,10 +366,20 @@ def mla_apply(p, cfg, x, positions, cache=None):
         assert s == 1, f"paged MLA cache is decode-only, got S={s}"
         page, slot, new_len = _paged_token_coords(cache, "kv_pages")
         row = jnp.concatenate([ckv, k_rope], axis=-1)[:, 0]  # (B, r+dr)
-        pool = cache["kv_pages"].at[0, page, slot].set(row, mode="drop")
-        out = _mla_attend_absorbed_paged(p, cfg, q_nope, q_rope, pool,
-                                         cache["block_tables"], new_len)
-        new_cache = {"kv_pages": pool}
+        if cache["kv_pages"].dtype == jnp.int8:
+            from repro.serve.kv_cache import quant_page_update
+
+            pool, ksc = quant_page_update(
+                cache["kv_pages"], cache["kv_scales"], page, slot, row[None])
+            out = _mla_attend_absorbed_paged(p, cfg, q_nope, q_rope, pool,
+                                             cache["block_tables"], new_len,
+                                             scales=ksc)
+            new_cache = {"kv_pages": pool, "kv_scales": ksc}
+        else:
+            pool = cache["kv_pages"].at[0, page, slot].set(row, mode="drop")
+            out = _mla_attend_absorbed_paged(p, cfg, q_nope, q_rope, pool,
+                                             cache["block_tables"], new_len)
+            new_cache = {"kv_pages": pool}
     else:
         cur = cache["len"]
         t = cache["ckv"].shape[1]

@@ -19,6 +19,8 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.optim.quant import quant_int8
+
 
 def default_dtype():
     return jnp.bfloat16
@@ -63,6 +65,39 @@ def _pallas_interpret() -> bool:
 
 
 # ---------------------------------------------------------------------------
+# quantized-GEMM implementation dispatch
+# ---------------------------------------------------------------------------
+
+# Which backend quantized dense layers (``quant_dense_apply``) run on —
+# same contract as the attention dispatch above:
+#   "auto"   — VTA Pallas GEMM (fused dequant epilogue) on TPU, jnp
+#              int8 reference elsewhere
+#   "pallas" — force the Pallas kernel (interpret mode off-TPU)
+#   "jnp"    — force the jnp reference
+# Seeded from $REPRO_GEMM_IMPL; switchable at runtime (re-jit applies it).
+_GEMM_IMPL = os.environ.get("REPRO_GEMM_IMPL", "auto")
+
+
+def set_gemm_impl(impl: str) -> str:
+    """Select the quantized-GEMM backend; returns the previous setting."""
+    global _GEMM_IMPL
+    if impl not in _ATTN_IMPLS:
+        raise ValueError(f"impl must be one of {_ATTN_IMPLS}, got {impl!r}")
+    prev, _GEMM_IMPL = _GEMM_IMPL, impl
+    return prev
+
+
+def gemm_impl() -> str:
+    return _GEMM_IMPL
+
+
+def _pallas_gemm() -> bool:
+    if _GEMM_IMPL == "pallas":
+        return True
+    return _GEMM_IMPL == "auto" and jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
 # initializers
 # ---------------------------------------------------------------------------
 
@@ -79,10 +114,49 @@ def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False,
 
 
 def dense_apply(p, x):
+    if "qw" in p:
+        return quant_dense_apply(p, x)
     y = x @ p["w"]
     if "b" in p:
         y = y + p["b"]
     return y
+
+
+def quant_dense_apply(p, x, act: str | None = None):
+    """QuantizedLinear forward: int8 weights (per-output-channel scales,
+    ``optim.quant.quantize_dense``) against dynamically int8-quantized
+    activations, int32 accumulation, fused dequant->bias->``act``.
+
+    Dispatcher twin of ``flash_attend``: on the Pallas path this is ONE
+    ``vta_gemm`` call with the dequant epilogue — the f32 pre-activation
+    never exists in HBM; the jnp reference quantizes the activations the
+    SAME way and accumulates through the same exact int32 lattice, so
+    the two backends agree to float rounding.
+    """
+    lead, k = x.shape[:-1], x.shape[-1]
+    qx, sx = quant_int8(x.reshape(-1, k))
+    # the dynamic per-tensor activation scale folds into the epilogue's
+    # per-channel weight scales — one multiplier per output column
+    scale = p["qscale"].astype(jnp.float32) * sx
+    bias = p["b"].astype(jnp.float32) if "b" in p else None
+    if _pallas_gemm():
+        from repro.kernels.ops import dense_int8
+
+        y = dense_int8(qx, p["qw"], scale, bias=bias, act=act,
+                       interpret=_pallas_interpret())
+    else:
+        acc = jnp.dot(qx.astype(jnp.int32), p["qw"].astype(jnp.int32))
+        y = acc.astype(jnp.float32) * scale[None, :]
+        if bias is not None:
+            y = y + bias
+        y = _epilogue_act(y, act)
+    return y.reshape(*lead, -1).astype(x.dtype)
+
+
+def _epilogue_act(y, act):
+    from repro.kernels.vta_gemm import _apply_act
+
+    return _apply_act(y, act)
 
 
 def embedding_init(key, vocab: int, d: int, dtype):
@@ -162,6 +236,12 @@ def gated_mlp_init(key, d: int, d_ff: int, dtype):
 
 
 def gated_mlp_apply(p, x):
+    if "qw" in p["w_gate"]:
+        # quantized path: silu fuses into the gate GEMM's epilogue —
+        # dequant -> silu is one kernel, no f32 intermediate in HBM
+        g = quant_dense_apply(p["w_gate"], x, act="silu")
+        u = quant_dense_apply(p["w_up"], x)
+        return quant_dense_apply(p["w_down"], g * u)
     g = jax.nn.silu(dense_apply(p["w_gate"], x).astype(jnp.float32)).astype(x.dtype)
     u = dense_apply(p["w_up"], x)
     return dense_apply(p["w_down"], g * u)
@@ -361,7 +441,7 @@ def decode_attend(q, k, v, *, kv_len, window: int = 0,
 
 def paged_decode_attend(q, k_pages, v_pages, block_tables, kv_lens, *,
                         window: int = 0, scale: float | None = None,
-                        dv: int | None = None):
+                        dv: int | None = None, k_scales=None, v_scales=None):
     """Single-token decode attention over a paged KV pool.
 
     q: (B,1,H,D); k_pages/v_pages: (Hkv, num_pages, page_size, W) shared
@@ -370,6 +450,9 @@ def paged_decode_attend(q, k_pages, v_pages, block_tables, kv_lens, *,
     per-sequence live token counts INCLUDING the just-written token
     (0 = inactive slot, output exactly zero).  ``dv`` restricts values
     to the leading columns of ``v_pages`` (the MLA shared-pool trick).
+    int8 pools pass their (Hkv, num_pages) per-page-per-head
+    ``k_scales``/``v_scales`` — dequantization happens inside the
+    kernel, right after the page DMA.
     Dispatcher triplet of ``decode_attend``: the Pallas kernel DMAs
     pages straight through the block table; the jnp fallback gathers
     the pages dense and masks per sequence.
@@ -379,19 +462,23 @@ def paged_decode_attend(q, k_pages, v_pages, block_tables, kv_lens, *,
 
         return paged_decode_attention(
             q, k_pages, v_pages, block_tables, kv_lens, window=window,
-            scale=scale, dv=dv, interpret=_pallas_interpret(),
+            scale=scale, dv=dv, k_scales=k_scales, v_scales=v_scales,
+            interpret=_pallas_interpret(),
         )
     return paged_decode_attend_ref(q, k_pages, v_pages, block_tables,
                                    kv_lens, window=window, scale=scale,
-                                   dv=dv)
+                                   dv=dv, k_scales=k_scales,
+                                   v_scales=v_scales)
 
 
 def paged_decode_attend_ref(q, k_pages, v_pages, block_tables, kv_lens, *,
                             window: int = 0, scale: float | None = None,
-                            dv: int | None = None):
+                            dv: int | None = None, k_scales=None,
+                            v_scales=None):
     """jnp reference: gather each sequence's pages into a dense
     (B, T, Hkv, W) view (T = pages_per_seq * page_size, position order
-    preserved) and attend with a per-sequence length/window mask."""
+    preserved, int8 pages dequantized by their page scale) and attend
+    with a per-sequence length/window mask."""
     b, s, h, d = q.shape
     hkv, num_pages, pg, _ = k_pages.shape
     g = h // hkv
@@ -400,12 +487,14 @@ def paged_decode_attend_ref(q, k_pages, v_pages, block_tables, kv_lens, *,
     bt = jnp.clip(block_tables, 0, num_pages - 1)
     t = bt.shape[1] * pg
 
-    def gather(pages, w):
+    def gather(pages, w, scales):
         dense = pages[:, bt]  # (Hkv, B, pages_per_seq, pg, W)
+        if scales is not None:
+            dense = dense.astype(jnp.float32) * scales[:, bt][..., None, None]
         return dense.transpose(1, 2, 3, 0, 4).reshape(b, t, hkv, -1)[..., :w]
 
-    kd = gather(k_pages, d).astype(jnp.float32)
-    vd = gather(v_pages, dv).astype(jnp.float32)
+    kd = gather(k_pages, d, k_scales).astype(jnp.float32)
+    vd = gather(v_pages, dv, v_scales).astype(jnp.float32)
     lens = jnp.asarray(kv_lens, jnp.int32)
     kv_pos = jnp.arange(t)
     mask = kv_pos[None, :] < lens[:, None]  # (B, T)

@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import DP, MDL, hint
-from repro.models.layers import gated_mlp_init
+from repro.models.layers import gated_mlp_init, quant_dense_apply
+from repro.optim.quant import quant_int8
 
 
 def moe_init(key, cfg, dtype):
@@ -46,8 +47,27 @@ def moe_init(key, cfg, dtype):
     return p
 
 
+def _q_expert_mm(qp, x):
+    """Quantized batched expert matmul: (E, C, K) x int8 (E, K, N).
+
+    Per-expert dynamic activation quantization (one scale per expert's
+    token buffer) against per-expert-per-channel weight scales; the
+    int8 x int8 -> int32 contraction lowers to the MXU's native int8
+    path via XLA (the expert batch can't flatten into the 2D VTA
+    kernel — each expert multiplies a different weight).
+    """
+    qx, sx = quant_int8(x, axes=(1, 2), keepdims=True)  # (E, 1, 1)
+    acc = jnp.einsum("eck,ekn->ecn", qx.astype(jnp.int32),
+                     qp["qw"].astype(jnp.int32))
+    return acc.astype(jnp.float32) * (sx * qp["qscale"][:, None, :])
+
+
 def _expert_ffn(expert_params, x):
     """x: (E, C, D) batched over experts; params leaves lead with E."""
+    if "qw" in expert_params["w_gate"]:
+        g = jax.nn.silu(_q_expert_mm(expert_params["w_gate"], x)).astype(x.dtype)
+        u = _q_expert_mm(expert_params["w_up"], x).astype(x.dtype)
+        return _q_expert_mm(expert_params["w_down"], g * u).astype(x.dtype)
     g = jax.nn.silu(
         jnp.einsum("ecd,edf->ecf", x, expert_params["w_gate"]["w"]).astype(jnp.float32)
     ).astype(x.dtype)
@@ -62,7 +82,10 @@ def moe_apply(p, cfg, x, capacity: int | None = None):
     n = b * s
     xt = x.reshape(n, d)
 
-    logits = xt.astype(jnp.float32) @ p["router"]  # (N, E)
+    if isinstance(p["router"], dict):  # quantized router projection
+        logits = quant_dense_apply(p["router"], xt.astype(jnp.float32))
+    else:
+        logits = xt.astype(jnp.float32) @ p["router"]  # (N, E)
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, gate_idx = jax.lax.top_k(probs, topk)  # (N, k)
     gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
@@ -95,7 +118,8 @@ def moe_apply(p, cfg, x, capacity: int | None = None):
     )
 
     if "shared" in p:
-        n_sh = p["shared"]["w_gate"]["w"].shape[0]
+        sh_gate = p["shared"]["w_gate"]
+        n_sh = next(iter(sh_gate.values())).shape[0]
         sh = _expert_ffn(
             p["shared"], jnp.broadcast_to(xt[None], (n_sh, n, d))
         )

@@ -15,6 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.models.layers import dense_apply
+
 
 STAGES = [(2, 64, 1), (2, 128, 2), (2, 256, 2), (2, 512, 2)]
 
@@ -96,4 +98,5 @@ def forward(params, images):
                 shortcut = _bn(blk["down_bn"], _conv(blk["down"], x, stride))
             x = jax.nn.relu(h + shortcut)
     x = jnp.mean(x, axis=(1, 2))
-    return x @ params["fc"]["w"] + params["fc"]["b"]
+    # dense_apply so a quantize_params-packed fc head dispatches too
+    return dense_apply(params["fc"], x)

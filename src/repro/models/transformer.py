@@ -361,17 +361,20 @@ def _one_cache(cfg, batch, max_len, dtype):
 
 def init_caches(cfg, batch, max_len, dtype=jnp.bfloat16, *,
                 cache_layout: str = "dense", page_size: int = 16,
-                num_pages: int | None = None):
+                num_pages: int | None = None, kv_dtype: str | None = None):
     """Serving caches.  ``cache_layout="dense"`` (default) is the
     per-slot (B, max_len, ...) buffer every train/prefill path uses;
     ``"paged"`` returns the serve/kv_cache.py pool layout (shared pages
     + block tables + per-sequence lens) that ``decode_step`` serves via
-    the paged split-KV kernel — decode-only, engine-managed."""
+    the paged split-KV kernel — decode-only, engine-managed.
+    ``kv_dtype`` ("f32"/"bf16"/"int8") overrides the paged pools' dtype;
+    int8 pools quantize at write time and carry per-page scales."""
     if cache_layout == "paged":
         from repro.serve.kv_cache import init_paged_caches
 
         return init_paged_caches(cfg, batch, max_len, dtype,
-                                 page_size=page_size, num_pages=num_pages)
+                                 page_size=page_size, num_pages=num_pages,
+                                 kv_dtype=kv_dtype)
     if cache_layout != "dense":
         raise ValueError(f"cache_layout must be 'dense' or 'paged', "
                          f"got {cache_layout!r}")

@@ -24,15 +24,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-
-def _quant_int8(g):
-    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def _dequant_int8(q, scale):
-    return q.astype(jnp.float32) * scale
+from repro.optim.quant import dequant_int8 as _dequant_int8
+from repro.optim.quant import quant_int8 as _quant_int8
 
 
 @dataclasses.dataclass(frozen=True)

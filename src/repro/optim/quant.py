@@ -1,0 +1,123 @@
+"""Shared int8 quantization helpers — ONE rounding/clamp convention.
+
+Every int8 path in the repo (gradient compression, quantized weights,
+the int8 paged KV cache) quantizes the same way:
+
+    scale = max(|x|, eps) / 127          (symmetric, zero-point free)
+    q     = clip(round(x / scale), -127, 127)  as int8
+    x'    = q * scale                    (dequantization)
+
+Round-to-nearest, clamp to the SYMMETRIC range [-127, 127] (the -128
+code is never emitted, so negation/accumulation can't overflow the
+int8 lattice), ``eps = 1e-12`` guards all-zero tensors.  Granularity is
+the caller's choice via ``axes``:
+
+* per-tensor   — gradient leaves (``Int8Compressor``), dynamic
+  activation quantization in the serving GEMMs;
+* per-output-channel (reduce the contraction axis) — weight matrices
+  (:func:`quantize_dense`), so each output column keeps its own range;
+* per-page-per-head — KV cache pages (serve/kv_cache.py), so one f32
+  scalar rides the block table per page.
+
+:func:`quantize_params` is the one-shot pack pass: it walks a model
+param tree and rewrites every dense-layer dict ``{"w"[, "b"]}`` (and
+MoE router arrays) into the ``QuantizedLinear`` form
+``{"qw" int8, "qscale" f32[, "b"]}`` that ``models/layers.py``
+dispatches through the VTA GEMM's fused dequant epilogue.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def scale_from_amax(amax):
+    """The amax -> scale step of the convention, shared by every path
+    that pre-reduces its own max (e.g. the KV page segment-max)."""
+    return jnp.maximum(amax, EPS) / 127.0
+
+
+def scale_for(x, axes=None, keepdims: bool = False):
+    """Symmetric int8 scale of ``x`` reduced over ``axes`` (None = all)."""
+    return scale_from_amax(
+        jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axes,
+                keepdims=keepdims))
+
+
+def quant_with_scale(x, scale):
+    """f32 -> int8 under a precomputed (broadcastable) scale."""
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def quant_int8(x, axes=None, keepdims: bool = False):
+    """Quantize; returns (q int8, scale f32 reduced over ``axes``)."""
+    scale = scale_for(x, axes=axes, keepdims=True)
+    q = quant_with_scale(x, scale)
+    if not keepdims and axes is not None:
+        scale = jnp.squeeze(scale, axis=axes)
+    elif not keepdims:
+        scale = scale.reshape(())
+    return q, scale
+
+
+def dequant_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# weight packing: params -> QuantizedLinear form
+# ---------------------------------------------------------------------------
+
+
+def quantize_dense(p: dict) -> dict:
+    """One dense-layer dict ``{"w" (..., K, N)[, "b"]}`` -> int8 form.
+
+    The scale is per-OUTPUT-channel: the contraction axis (-2) is
+    reduced, so a 2D ``(K, N)`` weight gets an ``(N,)`` scale and a
+    stacked-expert ``(E, K, N)`` weight gets ``(E, N)`` — every output
+    column dequantizes with its own range.
+    """
+    w = p["w"].astype(jnp.float32)
+    scale = scale_for(w, axes=(-2,))
+    out = {"qw": quant_with_scale(w, jnp.expand_dims(scale, -2)),
+           "qscale": scale}
+    if "b" in p:
+        out["b"] = p["b"]
+    return out
+
+
+def is_quantized(p) -> bool:
+    return isinstance(p, dict) and "qw" in p
+
+
+def quantize_params(params):
+    """One-shot pack pass over a model param tree.
+
+    Rewrites every GEMM-backed dense dict (``{"w"[, "b"]}`` with a 2D
+    weight, or 3D when stacked along a layer/expert axis) and MoE
+    ``router`` arrays into QuantizedLinear form — exactly the dicts
+    ``models.layers.dense_apply`` / ``moe_apply`` dispatch on.  Left
+    untouched: embeddings (a quantized table would corrupt the lookup
+    AND the tied LM head), norms, 1D leaves, and 4D conv weights (the
+    ResNet/frontend conv path reads ``p["w"]`` raw and runs through
+    ``ops.vta_conv2d``'s own int8 pipeline).  Pure function — the f32
+    params are not modified.
+    """
+
+    def walk(node, key=None):
+        if isinstance(node, dict):
+            leaves_ok = all(
+                not isinstance(v, dict) for k, v in node.items())
+            if ("w" in node and set(node) <= {"w", "b"} and leaves_ok
+                    and node["w"].ndim in (2, 3)):
+                return quantize_dense(node)
+            return {k: walk(v, k) for k, v in node.items()}
+        if key == "router" and hasattr(node, "ndim") and node.ndim >= 2:
+            return quantize_dense({"w": node})
+        return node
+
+    return walk(params)

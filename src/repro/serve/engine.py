@@ -69,12 +69,22 @@ class ServingEngine:
     ``max_slots`` is the decode batch width; ``num_pages`` the shared
     pool size (defaults to fully backing every slot at ``max_len`` —
     pass something smaller to exercise admission control).
+
+    ``kv_dtype`` selects the pool precision ("f32"/"bf16"/"int8"); the
+    admission-relevant pool size can be given in BYTES via
+    ``pool_bytes`` instead of pages — the engine divides by
+    ``kv_cache.page_bytes(cfg, page_size, kv_dtype)``, so the same byte
+    budget admits ~4x the concurrent sequences at int8 vs f32 (~2x vs
+    bf16).  Prefill still runs in ``dtype``; pages quantize at scatter
+    time.
     """
 
     def __init__(self, params, cfg, *, max_slots: int = 4,
                  max_len: int = 512, page_size: int = 16,
                  num_pages: int | None = None, prefill_chunk: int = 64,
-                 dtype=jnp.float32, eos_id: int | None = None):
+                 dtype=jnp.float32, eos_id: int | None = None,
+                 kv_dtype: str | None = None,
+                 pool_bytes: int | None = None):
         if not kv_cache.supports_paged(cfg):
             raise NotImplementedError(
                 f"ServingEngine: {cfg.name} ({cfg.family}) has recurrent/"
@@ -84,12 +94,21 @@ class ServingEngine:
         self.params, self.cfg = params, cfg
         self.max_slots, self.max_len = max_slots, max_len
         self.page_size, self.eos_id = page_size, eos_id
+        self.kv_dtype = kv_dtype or (
+            "bf16" if dtype == jnp.bfloat16 else "f32")
         self.max_pp = kv_cache.pages_for(max_len, page_size)
+        if pool_bytes is not None:
+            if num_pages is not None:
+                raise ValueError("pass num_pages OR pool_bytes, not both")
+            num_pages = kv_cache.pool_pages_for_bytes(
+                cfg, pool_bytes, page_size, self.kv_dtype)
         caches = tf.init_caches(cfg, max_slots, max_len, dtype,
                                 cache_layout="paged", page_size=page_size,
-                                num_pages=num_pages)
+                                num_pages=num_pages, kv_dtype=self.kv_dtype)
         self.blocks = caches["blocks"]
         self.num_pages = next(iter(self.blocks[0].values())).shape[1]
+        self.pool_bytes = self.num_pages * kv_cache.page_bytes(
+            cfg, page_size, self.kv_dtype)
         self.allocator = kv_cache.PageAllocator(self.num_pages)
         self.block_tables = np.full((max_slots, self.max_pp), -1, np.int32)
         self.slots = [_Slot() for _ in range(max_slots)]

@@ -28,11 +28,28 @@ The allocator itself is plain python: page churn is request-rate work
 (admission / retirement), not token-rate work, so it stays host-side
 while the pools, block tables and lengths live on device inside the
 jitted decode step.
+
+**int8 pools** (``kv_dtype="int8"``): pages store int8 rows plus ONE
+f32 scale per (kv-head, page) — GQA adds ``k_scales``/``v_scales``
+``(Hkv, num_pages)``, MLA's shared pool keeps a single ``kv_scales``
+``(1, num_pages)`` row.  Quantization happens at write time
+(:func:`write_prompt_pages` per page, :func:`quant_page_update` per
+decode token) with the shared ``optim.quant`` convention; the paged
+decode kernel dequantizes right after the page DMA (the scales ride
+the scalar-prefetch channel next to the block table), so the f32
+working set never exists in HBM.  At ~4x fewer bytes per page, the
+same pool byte budget (:func:`pool_pages_for_bytes`) admits ~4x the
+concurrent sequences.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+from repro.optim.quant import quant_with_scale, scale_for, scale_from_amax
+
+#: serving pool dtypes: per-page-per-head f32 scales appear iff int8
+KV_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:
@@ -101,31 +118,44 @@ def supports_paged(cfg) -> bool:
 
 
 def _layer_pool(cfg, num_pages: int, page_size: int, dtype):
+    quantized = dtype == jnp.int8
     if cfg.uses_mla:
         width = cfg.kv_lora_rank + cfg.rope_head_dim
-        return {"kv_pages": jnp.zeros((1, num_pages, page_size, width), dtype)}
-    return {
+        pool = {"kv_pages": jnp.zeros((1, num_pages, page_size, width), dtype)}
+        if quantized:  # one scale row per page (shared [c_kv|k_rope] pool)
+            pool["kv_scales"] = jnp.zeros((1, num_pages), jnp.float32)
+        return pool
+    pool = {
         "k_pages": jnp.zeros(
             (cfg.kv_heads, num_pages, page_size, cfg.head_dim), dtype),
         "v_pages": jnp.zeros(
             (cfg.kv_heads, num_pages, page_size, cfg.head_dim), dtype),
     }
+    if quantized:  # per-page-per-head scales
+        pool["k_scales"] = jnp.zeros((cfg.kv_heads, num_pages), jnp.float32)
+        pool["v_scales"] = jnp.zeros((cfg.kv_heads, num_pages), jnp.float32)
+    return pool
 
 
 def init_paged_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
-                      page_size: int = 16, num_pages: int | None = None):
+                      page_size: int = 16, num_pages: int | None = None,
+                      kv_dtype: str | None = None):
     """Paged serving caches for ``batch`` decode slots.
 
     Returns {"blocks": [per-layer pool dict], "block_tables":
     (B, pages_for(max_len)) int32 (-1 = unmapped), "lens": (B,) int32}.
     ``num_pages`` defaults to full backing (every slot can reach
     ``max_len``) — undersubscribe it to let the engine's admission
-    control do its job.
+    control do its job.  ``kv_dtype`` ("f32"/"bf16"/"int8") overrides
+    ``dtype`` for the pools; int8 pools carry per-page-per-head f32
+    scales next to the pages.
     """
     if not supports_paged(cfg):
         raise NotImplementedError(
             f"paged KV cache: unsupported family {cfg.family!r} "
             "(recurrent/enc-dec/frontend caches are not paged)")
+    if kv_dtype is not None:
+        dtype = KV_DTYPES[kv_dtype]
     max_pp = pages_for(max_len, page_size)
     if num_pages is None:
         num_pages = batch * max_pp
@@ -135,6 +165,39 @@ def init_paged_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
         "block_tables": jnp.full((batch, max_pp), -1, jnp.int32),
         "lens": jnp.zeros((batch,), jnp.int32),
     }
+
+
+def page_bytes(cfg, page_size: int, kv_dtype: str = "f32") -> int:
+    """HBM bytes ONE logical page costs across all layers — the unit the
+    engine's byte-budgeted pool sizing divides by.  A logical page maps
+    to a (page_size, width) row block in EVERY layer's pool (the block
+    table is shared), so the per-layer cost multiplies by num_layers;
+    int8 pools add the 4 B/head/page scale metadata the same way the
+    gradient-compression accounting counts its per-leaf scales."""
+    item = jnp.dtype(KV_DTYPES[kv_dtype]).itemsize
+    scales = 4 if KV_DTYPES[kv_dtype] == jnp.int8 else 0
+    if cfg.uses_mla:
+        width = cfg.kv_lora_rank + cfg.rope_head_dim
+        per_layer = page_size * width * item + scales
+    else:
+        per_layer = cfg.kv_heads * (2 * page_size * cfg.head_dim * item
+                                    + 2 * scales)
+    return cfg.num_layers * per_layer
+
+
+def pool_pages_for_bytes(cfg, pool_bytes: int, page_size: int,
+                         kv_dtype: str = "f32") -> int:
+    """Pages a byte budget buys — ``kv_dtype="int8"`` buys ~4x the pages
+    of f32 for the same budget, which the engine converts directly into
+    admission concurrency.  A budget below one page is an error, not a
+    silent over-allocation: the engine's equal-byte comparisons depend
+    on the pool never exceeding the stated budget."""
+    pages = pool_bytes // page_bytes(cfg, page_size, kv_dtype)
+    if pages < 1:
+        raise ValueError(
+            f"pool_bytes={pool_bytes} buys zero {kv_dtype} pages "
+            f"(page_bytes={page_bytes(cfg, page_size, kv_dtype)})")
+    return pages
 
 
 def page_size_of(caches) -> int:
@@ -167,6 +230,8 @@ def write_prompt_pages(paged_blocks, dense_blocks, block_row, n_tokens,
     first = next(iter(paged_blocks[0].values()))
     num_pages, pg = first.shape[1], first.shape[2]
     mla = "kv_pages" in paged_blocks[0]
+    quantized = first.dtype == jnp.int8
+    max_pp = block_row.shape[0]
     if mla:
         dense_rows = jnp.concatenate(
             [dense_blocks["ckv"], dense_blocks["k_rope"]], axis=-1
@@ -176,17 +241,53 @@ def write_prompt_pages(paged_blocks, dense_blocks, block_row, n_tokens,
         t = dense_blocks["k"].shape[2]
 
     pos = jnp.arange(t) + row0_pos  # logical position of each dense row
-    page = block_row[jnp.clip(pos // pg, 0, block_row.shape[0] - 1)]
+    local = jnp.clip(pos // pg, 0, max_pp - 1)
+    page = block_row[local]
     valid = (pos >= 0) & (pos < n_tokens) & (page >= 0)
     page = jnp.where(valid, page, num_pages)
     slot = pos % pg
+    # scale scatter targets: every MAPPED page of this request — pages
+    # reserved beyond the prompt get the eps scale (their recycled int8
+    # garbage dequantizes to ~0 until the decode write overwrites them)
+    spage = jnp.where(block_row >= 0, block_row, num_pages)
+
+    def _page_quant(rows):
+        """rows: (T, ..., W) f32 -> (q rows, per-page scales (max_pp, ...))
+        — one scale per (page, head) over the page's VALID rows."""
+        amax = jnp.max(jnp.abs(rows.astype(jnp.float32)), axis=-1)
+        amax = jnp.where(valid.reshape(t, *([1] * (amax.ndim - 1))), amax, 0.0)
+        seg = jnp.zeros((max_pp,) + amax.shape[1:], jnp.float32)
+        scales = scale_from_amax(seg.at[local].max(amax))
+        return quant_with_scale(rows, scales[local][..., None]), scales
 
     out = []
     for li, pool in enumerate(paged_blocks):
         if mla:
+            if quantized:
+                q, s = _page_quant(dense_rows[li])  # (T, W), (max_pp,)
+                out.append({
+                    "kv_pages": pool["kv_pages"].at[0, page, slot].set(
+                        q, mode="drop"),
+                    "kv_scales": pool["kv_scales"].at[0, spage].set(
+                        s, mode="drop"),
+                })
+            else:
+                out.append({
+                    "kv_pages": pool["kv_pages"].at[0, page, slot].set(
+                        dense_rows[li], mode="drop"),
+                })
+        elif quantized:
+            qk, sk = _page_quant(dense_blocks["k"][li, 0])  # (T,Hkv,D)
+            qv, sv = _page_quant(dense_blocks["v"][li, 0])
             out.append({
-                "kv_pages": pool["kv_pages"].at[0, page, slot].set(
-                    dense_rows[li], mode="drop"),
+                "k_pages": pool["k_pages"].at[:, page, slot].set(
+                    qk.transpose(1, 0, 2), mode="drop"),
+                "v_pages": pool["v_pages"].at[:, page, slot].set(
+                    qv.transpose(1, 0, 2), mode="drop"),
+                "k_scales": pool["k_scales"].at[:, spage].set(
+                    sk.T, mode="drop"),
+                "v_scales": pool["v_scales"].at[:, spage].set(
+                    sv.T, mode="drop"),
             })
         else:
             out.append({
@@ -196,3 +297,33 @@ def write_prompt_pages(paged_blocks, dense_blocks, block_row, n_tokens,
                     dense_blocks["v"][li, 0].transpose(1, 0, 2), mode="drop"),
             })
     return out
+
+
+def quant_page_update(pages, scales, page, slot, row):
+    """Insert one decode token's row per sequence into its int8 page,
+    requantizing the page under the (possibly grown) scale.
+
+    pages: (Hkv, P, pg, W) int8 pool; scales: (Hkv, P) f32; page/slot:
+    (B,) int32 write coordinates from ``_paged_token_coords`` (page == P
+    for inactive slots -> scatter dropped); row: (Hkv, B, W) f32.
+    Returns (pages, scales).
+
+    The page is gathered, dequantized, the new row inserted, and the
+    whole page requantized at its new max: if the new row fits the old
+    range the old rows requantize EXACTLY (same scale, int8 codes
+    unchanged); a range-growing row re-rounds the page's rows once.
+    Rows past the write slot are recycled-page garbage — masked out of
+    the max and zeroed on the write, so a retired request's large
+    values can never inflate (or corrupt) a new request's scale.
+    """
+    hkv, num_pages, pg, w = pages.shape
+    b = page.shape[0]
+    pcl = jnp.clip(page, 0, num_pages - 1)
+    cur = pages[:, pcl].astype(jnp.float32) * scales[:, pcl][..., None, None]
+    cur = cur.at[:, jnp.arange(b), slot].set(row.astype(jnp.float32))
+    live = jnp.arange(pg)[None, :] <= slot[:, None]  # (B, pg)
+    cur = cur * live[None, :, :, None]
+    new_scale = scale_for(cur, axes=(2, 3))  # (Hkv, B)
+    new_q = quant_with_scale(cur, new_scale[..., None, None])
+    return (pages.at[:, page].set(new_q, mode="drop"),
+            scales.at[:, page].set(new_scale, mode="drop"))
