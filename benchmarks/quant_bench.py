@@ -30,6 +30,7 @@ exact request accounting).
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -116,11 +117,18 @@ def _gemm_table():
     return rows
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="benchmarks.quant_bench")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace RNG seed (prompts + arrival gaps); "
+                         "recorded in the emitted rows")
+    args = ap.parse_args([] if argv is None else argv)
+
     cfg = get_config("qwen3_0p6b").scaled_down(**MODEL_KW)
     params = tf.init(jax.random.PRNGKey(0), cfg, jnp.float32)
-    reqs = _trace(cfg)
-    results = []
+    reqs = _trace(cfg, seed=args.seed)
+    results = [("quant_trace", 0.0, f"seed={args.seed};"
+                f"requests={N_REQUESTS};budget_f32_pages={BUDGET_F32_PAGES}")]
 
     match, total = _accuracy_gate(params, cfg)
     print(f"accuracy gate: int8 KV matches f32 greedy on {match}/{total} "

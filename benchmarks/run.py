@@ -9,9 +9,10 @@ archive the per-PR perf trajectory.
 ``--only mod1,mod2`` restricts to a subset (unknown names fail fast;
 ``--list`` prints the registry).  CI smoke runs
 ``--only kernel_bench,attn_bench`` and, under 4 fake devices,
-``--only pipeline_bench``, ``--only serving_bench`` and
-``--only quant_bench`` — their rows go to ``BENCH_serving.json`` /
-``BENCH_pipeline.json`` / ``BENCH_quant.json``.
+``--only pipeline_bench``, ``--only serving_bench``,
+``--only quant_bench`` and ``--only spec_bench`` — their rows go to
+``BENCH_serving.json`` / ``BENCH_pipeline.json`` / ``BENCH_quant.json``
+/ ``BENCH_spec.json``.
 """
 
 from __future__ import annotations
@@ -26,9 +27,10 @@ BENCH_JSON = "BENCH_kernels.json"
 PIPELINE_JSON = "BENCH_pipeline.json"
 SERVING_JSON = "BENCH_serving.json"
 QUANT_JSON = "BENCH_quant.json"
+SPEC_JSON = "BENCH_spec.json"
 #: modules whose rows are archived separately from the kernel JSON
 _SPLIT_JSON = {"pipeline_bench": PIPELINE_JSON, "serving_bench": SERVING_JSON,
-               "quant_bench": QUANT_JSON}
+               "quant_bench": QUANT_JSON, "spec_bench": SPEC_JSON}
 
 
 def _capture(mod_main):
@@ -86,6 +88,7 @@ def main(argv=None) -> None:
         power,
         quant_bench,
         serving_bench,
+        spec_bench,
         strategy_tpu,
     )
 
@@ -100,6 +103,7 @@ def main(argv=None) -> None:
         ("pipeline_bench", pipeline_bench.main),
         ("serving_bench", serving_bench.main),
         ("quant_bench", quant_bench.main),
+        ("spec_bench", spec_bench.main),
         ("strategy_tpu", strategy_tpu.main),
         ("power", power.main),
     ]

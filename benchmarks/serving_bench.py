@@ -28,6 +28,7 @@ claim), mirroring attn_bench's decode rows.
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -163,12 +164,19 @@ def _kernel_accounting():
     return kv_lens.tolist(), want, total
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="benchmarks.serving_bench")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace RNG seed (prompts + arrival gaps); "
+                         "recorded in the emitted rows")
+    args = ap.parse_args([] if argv is None else argv)
+
     cfg = get_config("qwen3_0p6b").scaled_down(**MODEL_KW)
     params = tf.init(jax.random.PRNGKey(0), cfg, jnp.float32)
-    reqs = _trace(cfg)
+    reqs = _trace(cfg, seed=args.seed)
     total_new = sum(r[2] for r in reqs)
-    results = []
+    results = [("serving_trace", 0.0,
+                f"seed={args.seed};requests={N_REQUESTS};slots={SLOTS}")]
 
     # correctness gate: the engine must reproduce the dense greedy path
     small = get_config("qwen3_0p6b").scaled_down(num_layers=2, d_model=64,

@@ -1,0 +1,212 @@
+"""Prefix-sharing + speculative-decoding benchmark (ISSUE-6 acceptance).
+
+A 2x2 grid over the SAME shared-prefix Poisson trace, same model, same
+jitted step shapes — only the engine features differ:
+
+* **baseline**   — prefix cache off, speculation off (the PR-4 engine);
+* **prefix**     — radix prefix cache on: requests arrive in groups
+  sharing a long prompt prefix (the agent / few-shot serving regime),
+  so admission pins the cached prefix pages and prefills ONLY the
+  unseen suffix;
+* **spec**       — speculative decoding on: a small draft proposes
+  ``SPEC_K`` tokens per slot, the target verifies all of them in one
+  multi-token paged step;
+* **combined**   — both.
+
+Gates (the ISSUE-6 acceptance floors):
+
+* every grid cell's emitted tokens are BITWISE-identical to the
+  baseline engine's greedy output for every request (f32 pools —
+  prefix sharing and speculation are pure scheduling, not numerics);
+* the prefix cell serves >= 50% of prompt tokens from shared pages
+  (prefill-token reduction);
+* the combined cell lands >= 1.5x baseline token throughput.
+
+The trace is prefill-dominated by design (long shared prompts, short
+generations): that is the regime prefix sharing targets, and it keeps
+the measured ratio structural.  The draft here is a randomly-seeded
+tiny model, so acceptance sits at the +1-token floor — speculation's
+measured cost is its worst case (every proposal rejected, the verify
+step still emitting exactly one greedy token per slot), and the
+combined gate passing DESPITE that shows the prefix savings dominate.
+An identical-params draft run reports the full-acceptance upper bound
+(``accepted/slot-step == SPEC_K + 1`` modulo request truncation) for
+the accept-rate table in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.serving_bench import MODEL_KW
+from repro.configs.base import get_config
+from repro.models import transformer as tf
+from repro.serve.engine import ServingEngine
+
+SLOTS = 4
+PAGE = 16
+MAX_LEN = 320
+SHARED = 224          # tokens of shared prompt prefix per group
+UNIQUE = 16           # per-request unique prompt tail
+N_GROUPS = 2
+PER_GROUP = 8
+NEW_MIX = [2, 4, 3, 5]
+ARRIVAL_MEAN_S = 0.002
+PREFILL_CHUNK = 32
+SPEC_K = 2
+
+DRAFT_KW = dict(num_layers=1, d_model=64, vocab=MODEL_KW["vocab"],
+                num_heads=4, kv_heads=2, head_dim=16, d_ff=128)
+
+
+def _trace(cfg, seed=0):
+    """Poisson arrivals, ``N_GROUPS`` prompt-prefix groups interleaved
+    round-robin (the order sharers actually arrive in a serving mix)."""
+    rng = np.random.default_rng(seed)
+    shared = [rng.integers(0, cfg.vocab, (SHARED,)).astype(np.int32)
+              for _ in range(N_GROUPS)]
+    t, reqs = 0.0, []
+    for i in range(N_GROUPS * PER_GROUP):
+        t += rng.exponential(ARRIVAL_MEAN_S)
+        tail = rng.integers(0, cfg.vocab, (UNIQUE,)).astype(np.int32)
+        prompt = np.concatenate([shared[i % N_GROUPS], tail])
+        reqs.append((t, prompt, NEW_MIX[i % len(NEW_MIX)]))
+    return reqs
+
+
+def _pass(eng, reqs):
+    """Replay the trace (arrivals honored); returns (done, dt)."""
+    t0 = time.perf_counter()
+    submitted = 0
+    while True:
+        now = time.perf_counter() - t0
+        while submitted < len(reqs) and reqs[submitted][0] <= now:
+            eng.submit(reqs[submitted][1], reqs[submitted][2])
+            submitted += 1
+        if submitted == len(reqs) and eng.pending == 0 and eng.active == 0:
+            break
+        eng.step()
+    done = eng.run()
+    return done, time.perf_counter() - t0
+
+
+def _run_cell(params, cfg, reqs, **engine_kw):
+    """Build an engine, one untimed warm pass (compiles every prefill /
+    suffix / verify bucket), then the timed pass with fresh counters."""
+    eng = ServingEngine(params, cfg, max_slots=SLOTS, max_len=MAX_LEN,
+                        page_size=PAGE, prefill_chunk=PREFILL_CHUNK,
+                        num_pages=2 * SLOTS * (MAX_LEN // PAGE),
+                        **engine_kw)
+    free0 = eng.allocator.num_free
+    _pass(eng, reqs)
+    if eng.prefix is not None:
+        eng.prefix.clear()  # the timed pass rediscovers sharing itself
+    before = eng.stats()
+    done, dt = _pass(eng, reqs)
+    after = eng.stats()
+    if eng.prefix is not None:
+        eng.prefix.clear()
+    assert eng.allocator.num_free == free0, "page leak"
+    diff = {k: after[k] - before[k] for k in after
+            if isinstance(after[k], int) and k in before}
+    diff["accepted_per_spec_step"] = (
+        (after["spec_emitted"] - before["spec_emitted"])
+        / max(after["spec_slot_steps"] - before["spec_slot_steps"], 1)
+        if "spec_emitted" in after else 0.0)
+    return done, dt, diff
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="benchmarks.spec_bench")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace RNG seed (prompts + arrival gaps); "
+                         "recorded in the emitted rows")
+    args = ap.parse_args([] if argv is None else argv)
+
+    cfg = get_config("qwen3_0p6b").scaled_down(**MODEL_KW)
+    params = tf.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    dcfg = get_config("qwen3_0p6b").scaled_down(**DRAFT_KW)
+    dparams = tf.init(jax.random.PRNGKey(3), dcfg, jnp.float32)
+    reqs = _trace(cfg, seed=args.seed)
+    total_new = sum(r[2] for r in reqs)
+    results = [("spec_trace", 0.0,
+                f"seed={args.seed};groups={N_GROUPS}x{PER_GROUP};"
+                f"shared={SHARED};unique={UNIQUE};spec_k={SPEC_K}")]
+
+    spec_kw = dict(draft_params=dparams, draft_cfg=dcfg, spec_k=SPEC_K)
+    grid = [
+        ("baseline", {}),
+        ("prefix", dict(prefix_cache=True)),
+        ("spec", spec_kw),
+        ("combined", dict(prefix_cache=True, **spec_kw)),
+    ]
+    tps, tokens_by_rid = {}, None
+    for name, kw in grid:
+        done, dt, st = _run_cell(params, cfg, reqs, **kw)
+        got = {r.rid: list(r.tokens) for r in done}
+        if tokens_by_rid is None:
+            tokens_by_rid = got
+        # the acceptance gate: scheduling features change NO tokens
+        assert got == tokens_by_rid, (
+            f"{name}: emitted tokens diverge from baseline greedy")
+        ntok = sum(len(v) for v in got.values())
+        tps[name] = ntok / dt
+        extra = ""
+        if kw.get("prefix_cache"):
+            saved = st["prefix_hit_tokens"]
+            extra += (f";hit_tokens={saved};"
+                      f"prefill_reduction={saved / st['prompt_tokens']:.2f}")
+        if "draft_params" in kw:
+            extra += f";accept_per_step={st['accepted_per_spec_step']:.2f}"
+        print(f"{name:>9}: {ntok}/{total_new} tokens in {dt*1e3:.0f} ms "
+              f"({tps[name]:.0f} tok/s; prefilled "
+              f"{st['prefilled_tokens']}/{st['prompt_tokens']} prompt "
+              f"tokens{extra.replace(';', ', ')})")
+        results.append((f"spec_serving_{name}", dt / ntok * 1e6,
+                        f"tok_s={tps[name]:.0f};"
+                        f"prefilled={st['prefilled_tokens']};"
+                        f"prompt={st['prompt_tokens']}"
+                        f"{extra};seed={args.seed}"))
+        if name == "prefix":
+            reduction = st["prefix_hit_tokens"] / st["prompt_tokens"]
+            assert reduction >= 0.5, (
+                f"prefix cache must cut >=50% of prefill tokens on the "
+                f"shared-prefix trace, got {reduction:.0%}")
+            results.append(("spec_prefill_reduction", 0.0,
+                            f"ratio={reduction:.2f}"))
+
+    speedup = tps["combined"] / tps["baseline"]
+    print(f"combined speedup: {speedup:.2f}x token throughput vs baseline "
+          f"(prefix sharing carries it; the random draft's acceptance sits "
+          f"at the +1 floor)")
+    assert speedup >= 1.5, (
+        f"prefix+spec must land >=1.5x baseline tok/s on the shared-prefix "
+        f"trace, got {speedup:.2f}x")
+    results.append(("spec_combined_speedup", 0.0, f"ratio={speedup:.2f}"))
+
+    # full-acceptance upper bound: draft == target accepts every
+    # proposal, bounding what a TRAINED draft buys per verify step
+    done, dt, st = _run_cell(params, cfg, reqs, draft_params=params,
+                             draft_cfg=cfg, spec_k=SPEC_K)
+    got = {r.rid: list(r.tokens) for r in done}
+    assert got == tokens_by_rid, "identical-draft run diverged from greedy"
+    acc = st["accepted_per_spec_step"]
+    print(f"identical-draft acceptance: {acc:.2f} tokens/slot-step of "
+          f"k+1={SPEC_K + 1} (full accepts modulo request truncation)")
+    assert acc >= 1.9, acc  # full accepts; NEW_MIX truncation caps at 2.0
+    results.append(("spec_accept_upper_bound", 0.0,
+                    f"accept_per_step={acc:.2f};k={SPEC_K}"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, der in results:
+        print(f"{name},{us:.1f},{der}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

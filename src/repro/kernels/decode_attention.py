@@ -53,6 +53,7 @@ DEFAULT_BLOCK_K = 512
 def _split_kv_partition(
     q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, cnt_ref, *,
     kvlen, k_lo, kc, window, scale, k_scale=None, v_scale=None,
+    qs=1, group=None,
 ):
     """One KV partition of a split-KV decode step: emit the unnormalized
     partial output plus (m, l) online-softmax statistics, or neutral
@@ -64,33 +65,45 @@ def _split_kv_partition(
     right after its DMA: because the scale is per PAGE (== partition),
     it folds into the logits as one scalar multiplier after the QK dot
     and into the partial output after the PV dot — the dequantized f32
-    panel never exists outside this partition's registers."""
-    q_pos = kvlen - 1  # the decoded token is the newest cache entry
+    panel never exists outside this partition's registers.
+
+    ``qs`` > 1 is the MULTI-TOKEN (speculative verify) form: the q panel
+    carries ``qs`` consecutive positions ``[kvlen - qs, kvlen)``
+    position-major (row ``r`` is position ``kvlen - qs + r // group``),
+    each causally masked at its own position.  A row whose positions all
+    fall before this partition masks fully — its (m = MASK_VALUE, l = kc)
+    statistics are then annihilated by the cross-partition combine
+    (``alpha ~ exp(MASK_VALUE - m_glob) = 0``), the same mechanism that
+    kills dead partitions."""
+    group = group if group is not None else q_ref.shape[-2]
 
     executed = k_lo < kvlen
     if window > 0:
-        executed &= (k_lo + kc - 1) > (q_pos - window)
+        # live iff inside the OLDEST row's window (kvlen - qs, ...]
+        executed &= (k_lo + kc - 1) > (kvlen - qs - window)
     if cnt_ref is not None:
         cnt_ref[...] = jnp.broadcast_to(
             executed.astype(jnp.int32), cnt_ref.shape)
 
     @pl.when(executed)
     def _partition():
-        q = q_ref[...].reshape(q_ref.shape[-2], q_ref.shape[-1])  # (G, D)
+        q = q_ref[...].reshape(q_ref.shape[-2], q_ref.shape[-1])  # (qs*G, D)
         k = k_ref[...].reshape(kc, k_ref.shape[-1])
         if k_scale is not None:
             k = k.astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
-        ) * scale  # (G, kc)
+        ) * scale  # (qs*G, kc)
         if k_scale is not None:
             s = s * k_scale
 
         cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = cols < kvlen
+        row_pos = kvlen - qs + (
+            jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group)
+        mask = cols <= row_pos  # == cols < kvlen when qs == 1
         if window > 0:
-            mask &= cols > q_pos - window
+            mask &= cols > row_pos - window
         s = jnp.where(mask, s, MASK_VALUE)
 
         m = jnp.max(s, axis=1, keepdims=True)  # (G, 1)
@@ -241,7 +254,8 @@ def decode_partition_counts(t: int, kv_len: int, *,
 
 
 def _paged_kernel(
-    *refs, pg, window, scale, with_counts, quantized, num_pages, max_pp,
+    *refs, pg, window, scale, with_counts, quantized, num_pages, max_pp, qs,
+    group,
 ):
     if quantized:
         btref, lref, ksref, vsref = refs[:4]
@@ -257,7 +271,7 @@ def _paged_kernel(
     if quantized:
         # the page this partition's DMA presented (same clamp as the
         # index map) picks its scale off the scalar-prefetch channel
-        first, last = _live_page_range(kvlen, pg=pg, window=window)
+        first, last = _live_page_range(kvlen, pg=pg, window=window, qs=qs)
         page = btref[ib * max_pp + jnp.clip(ip, first, last)]
         page = jnp.clip(page, 0, num_pages - 1)
         k_scale = ksref[ih * num_pages + page]
@@ -265,17 +279,19 @@ def _paged_kernel(
     _split_kv_partition(
         q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, cnt_ref,
         kvlen=kvlen, k_lo=ip * pg, kc=pg, window=window, scale=scale,
-        k_scale=k_scale, v_scale=v_scale)
+        k_scale=k_scale, v_scale=v_scale, qs=qs, group=group)
 
 
-def _live_page_range(kvlen, *, pg, window):
+def _live_page_range(kvlen, *, pg, window, qs=1):
     """[first, last] live partition indices for a sequence of ``kvlen``
     tokens (partition == page).  Mirrors the ``executed`` predicate in
-    ``_split_kv_partition``; empty caches collapse to [0, 0]."""
+    ``_split_kv_partition`` (``qs`` query rows end at ``kvlen - 1``);
+    empty caches collapse to [0, 0]."""
     last = jnp.maximum((kvlen - 1) // pg, 0)
     if window > 0:
-        # page ip is inside the window iff ip*pg + pg - 1 > q_pos - window
-        c = (kvlen - 1) - window + 2 - pg
+        # page ip is live iff ip*pg + pg - 1 > (kvlen - qs) - window,
+        # the OLDEST query row's window edge
+        c = (kvlen - qs) - window + 2 - pg
         first = jnp.maximum(jnp.int32(0), -((-c) // pg))
     else:
         first = jnp.int32(0)
@@ -294,9 +310,10 @@ def paged_decode_attention(
 ):
     """Split-KV decode attention over a paged KV pool.
 
-    q: (B, 1, H, D) — the new tokens' queries, K/V for them already
-    written into the pool (so sequence b's query sits at absolute
-    position ``kv_lens[b] - 1``);
+    q: (B, S, H, D) — the new tokens' queries (S = 1 decode, S > 1
+    speculative verify), K/V for them already written into the pool (so
+    sequence b's last query sits at absolute position
+    ``kv_lens[b] - 1``);
     k_pages / v_pages: (Hkv, num_pages, page_size, W) shared pools;
     block_tables: (B, pages_per_seq) int32 pool-page indices — entries
     past a sequence's live pages (and whole rows of inactive slots) may
@@ -315,11 +332,18 @@ def paged_decode_attention(
     per-page-per-head scales (kv_cache.py writes them) — they ride the
     scalar-prefetch channel next to the block table, and each partition
     dequantizes its page right after the DMA.  MLA's shared pool passes
-    the SAME array for both.  Returns (B, 1, H, dv)
+    the SAME array for both.  Returns (B, S, H, dv)
     [+ (B, Hkv, P) execution map].
+
+    **S > 1** is the speculative-verify form: q carries S consecutive
+    positions per sequence ending at ``kv_lens[b] - 1`` (their K/V
+    already written), folded into the kernel's row axis position-major
+    — row ``r`` of a panel is position ``kv_lens[b] - S + r // group``,
+    masked causally at its own position.  One batched call verifies
+    every slot's whole draft against the same paged pool the S=1
+    decode serves from.
     """
     b, s, h, d = q.shape
-    assert s == 1, f"paged_decode_attention is an S=1 kernel, got S={s}"
     hkv, num_pages, pg, wk = k_pages.shape
     assert wk >= d, (wk, d)
     g = h // hkv
@@ -330,7 +354,9 @@ def paged_decode_attention(
     assert quantized == (k_scales is not None) == (v_scales is not None), \
         "int8 pools need k_scales AND v_scales; float pools must not pass them"
 
-    q3 = q.reshape(b, hkv, g, d)
+    # position-major row fold: row r = position s_idx * g + group g_idx
+    q3 = (q.reshape(b, s, hkv, g, d).transpose(0, 2, 1, 3, 4)
+          .reshape(b, hkv, s * g, d))
     bt_flat = block_tables.reshape(-1).astype(jnp.int32)
     lens = jnp.asarray(kv_lens, jnp.int32)
     scalars = [bt_flat, lens]
@@ -341,19 +367,21 @@ def paged_decode_attention(
     def kv_index(ib, ih, ip, btref, lref, *_):
         # dead partitions re-present the sequence's last live page: the
         # block table is the DMA descriptor, -1 tails never dereference
-        first, last = _live_page_range(lref[ib], pg=pg, window=window)
+        first, last = _live_page_range(lref[ib], pg=pg, window=window, qs=s)
         page = btref[ib * max_pp + jnp.clip(ip, first, last)]
         return ih, jnp.clip(page, 0, num_pages - 1), 0, 0
 
+    rows = s * g
     out_specs = [
-        pl.BlockSpec((1, 1, 1, g, dv), lambda ib, ih, ip, *_: (ib, ih, ip, 0, 0)),
-        pl.BlockSpec((1, 1, 1, g), lambda ib, ih, ip, *_: (ib, ih, ip, 0)),
-        pl.BlockSpec((1, 1, 1, g), lambda ib, ih, ip, *_: (ib, ih, ip, 0)),
+        pl.BlockSpec((1, 1, 1, rows, dv),
+                     lambda ib, ih, ip, *_: (ib, ih, ip, 0, 0)),
+        pl.BlockSpec((1, 1, 1, rows), lambda ib, ih, ip, *_: (ib, ih, ip, 0)),
+        pl.BlockSpec((1, 1, 1, rows), lambda ib, ih, ip, *_: (ib, ih, ip, 0)),
     ]
     out_shape = [
-        jax.ShapeDtypeStruct((b, hkv, max_pp, g, dv), jnp.float32),
-        jax.ShapeDtypeStruct((b, hkv, max_pp, g), jnp.float32),
-        jax.ShapeDtypeStruct((b, hkv, max_pp, g), jnp.float32),
+        jax.ShapeDtypeStruct((b, hkv, max_pp, rows, dv), jnp.float32),
+        jax.ShapeDtypeStruct((b, hkv, max_pp, rows), jnp.float32),
+        jax.ShapeDtypeStruct((b, hkv, max_pp, rows), jnp.float32),
     ]
     if return_counts:
         out_specs.append(
@@ -364,7 +392,8 @@ def paged_decode_attention(
         num_scalar_prefetch=len(scalars),
         grid=(b, hkv, max_pp),
         in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ip, *_: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, rows, d),
+                         lambda ib, ih, ip, *_: (ib, ih, 0, 0)),
             pl.BlockSpec((1, 1, pg, d), kv_index),
             pl.BlockSpec((1, 1, pg, dv), kv_index),
         ],
@@ -373,7 +402,7 @@ def paged_decode_attention(
     res = pl.pallas_call(
         functools.partial(_paged_kernel, pg=pg, window=window, scale=scale,
                           with_counts=return_counts, quantized=quantized,
-                          num_pages=num_pages, max_pp=max_pp),
+                          num_pages=num_pages, max_pp=max_pp, qs=s, group=g),
         grid_spec=grid_spec,
         out_shape=out_shape,
         compiler_params=_compiler_params(
@@ -381,7 +410,8 @@ def paged_decode_attention(
         ),
         interpret=interpret,
     )(*scalars, q3, k_pages, v_pages)
-    out = _combine_partitions(*res[:3]).reshape(b, 1, h, dv).astype(q.dtype)
+    out = (_combine_partitions(*res[:3]).reshape(b, hkv, s, g, dv)
+           .transpose(0, 2, 1, 3, 4).reshape(b, s, h, dv).astype(q.dtype))
     if return_counts:
         return out, res[3]
     return out

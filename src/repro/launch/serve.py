@@ -13,6 +13,7 @@ one decode batch (EXPERIMENTS.md §Serving).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -30,16 +31,34 @@ def _run_paged_engine(params, cfg, args):
     from repro.serve.engine import ServingEngine, latency_stats
 
     max_len = args.prompt + args.new_tokens
+    draft_params = draft_cfg = None
+    if args.draft:
+        draft_cfg = get_config(args.draft)
+        if args.smoke:
+            draft_cfg = draft_cfg.scaled_down()
+        draft_cfg = dataclasses.replace(draft_cfg, vocab=cfg.vocab)
+        draft_params = tf.init(jax.random.PRNGKey(2), draft_cfg, jnp.float32)
+    # with the prefix cache on, a zero-slack pool evicts every retired
+    # prefix before its sharer arrives — double it so pages can linger
+    pages = -(-max_len // args.page_size) * args.batch
     eng = ServingEngine(
         params, cfg, max_slots=args.batch, max_len=max_len,
         page_size=args.page_size, kv_dtype=args.kv_dtype,
-        prefill_chunk=max(16, args.prompt // 4))
+        num_pages=2 * pages if args.prefix_cache else pages,
+        prefill_chunk=max(16, args.prompt // 4),
+        prefix_cache=args.prefix_cache,
+        draft_params=draft_params, draft_cfg=draft_cfg, spec_k=args.spec_k)
     rng = jax.random.PRNGKey(1)
     # mixed-length trace: prompts at the configured length, generation
-    # lengths spread 1/4x..1x so slots actually churn
+    # lengths spread 1/4x..1x so slots actually churn; with the prefix
+    # cache on, half the requests share one prompt prefix
+    rng, ks = jax.random.split(rng)
+    shared = jax.random.randint(ks, (args.prompt // 2,), 0, cfg.vocab)
     for i in range(2 * args.batch):
         rng, k = jax.random.split(rng)
         prompt = jax.random.randint(k, (args.prompt,), 0, cfg.vocab)
+        if args.prefix_cache and i % 2:
+            prompt = jnp.concatenate([shared, prompt[args.prompt // 2:]])
         new = max(1, args.new_tokens // (1 + i % 4))
         eng.submit(jnp.asarray(prompt), new)
     t0 = time.time()
@@ -51,8 +70,23 @@ def _run_paged_engine(params, cfg, args):
           f"({stats['tokens']/dt:.0f} tok/s)")
     print(f"  token latency p50 {stats['token_p50_s']*1e3:.1f} ms, "
           f"p99 {stats['token_p99_s']*1e3:.1f} ms; "
+          f"ttft p50 {stats['ttft_p50_s']*1e3:.1f} ms, "
+          f"p99 {stats['ttft_p99_s']*1e3:.1f} ms; "
           f"pool {eng.num_pages} pages x {args.page_size} slots "
           f"({eng.kv_dtype}, {eng.pool_bytes/2**10:.0f} KiB)")
+    es = eng.stats()
+    print(f"  admitted {es['admitted']}, rejected {es['rejected']}; "
+          f"prefilled {es['prefilled_tokens']}/{es['prompt_tokens']} "
+          "prompt tokens")
+    if args.prefix_cache:
+        print(f"  prefix cache: {es['prefix_hits']}/{es['prefix_lookups']} "
+              f"hits, {es['prefix_hit_tokens']} tokens served from shared "
+              f"pages, {es['prefix_evicted_pages']} evicted, "
+              f"{es['prefix_nodes']} resident nodes")
+    if eng.spec_k:
+        print(f"  speculative k={es['spec_k']}: "
+              f"{es['accepted_per_spec_step']:.2f} tokens/slot-step "
+              f"over {es['spec_steps']} verify steps")
 
 
 def main(argv=None):
@@ -72,6 +106,15 @@ def main(argv=None):
                     help="paged-engine pool precision; int8 stores "
                          "quarter-size pages + per-page scales, so the "
                          "same pool bytes admit ~4x the sequences")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged engine: share prompt-prefix KV pages "
+                         "across requests via the radix prefix cache")
+    ap.add_argument("--draft", default=None,
+                    help="paged engine: arch id of a draft model — turns "
+                         "on speculative decoding (vocab coerced to the "
+                         "target's)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative tokens proposed per slot per step")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)

@@ -16,8 +16,9 @@ SWA:  same but T == window and writes wrap (rolling buffer, O(window))
 MLA:  {"ckv": (B, T, R), "k_rope": (B, T, Dr), "len": i32} — the
       compressed cache that makes deepseek-v2 long-context serving cheap.
 
-Paged decode (serve/kv_cache.py layout, S=1 only): the cache dict
-instead carries a shared page pool plus per-sequence routing —
+Paged decode (serve/kv_cache.py layout; S=1 decode, S>1 speculative
+verify): the cache dict instead carries a shared page pool plus
+per-sequence routing —
 GQA:  {"k_pages"/"v_pages": (Hkv, P, page, D),
        "block_tables": (B, pages), "len": (B,) i32}
 MLA:  {"kv_pages": (1, P, page, r+dr), ...} — and ``len`` is the
@@ -66,23 +67,28 @@ def _w(p):
     return p["w"]
 
 
-def _paged_token_coords(cache, pool_key):
-    """Where this step's token lands in the pool, per slot.
+def _paged_token_coords(cache, pool_key, s: int = 1):
+    """Where this step's ``s`` tokens land in the pool, per slot.
 
-    Returns (page, slot, new_len): page is the pool index at each
-    sequence's write position — inactive slots (block table row -1) get
-    ``num_pages``, i.e. out of bounds, so a ``mode="drop"`` scatter
-    discards them; new_len is the post-write per-sequence fill (0 stays
-    0 for inactive slots, which zeroes their attention output too).
+    Returns (page, slot, new_len): page (B, S) is the pool index at
+    each sequence's write positions ``len .. len+s-1`` — inactive slots
+    (block table row -1) get ``num_pages``, i.e. out of bounds, so a
+    ``mode="drop"`` scatter discards them; new_len is the post-write
+    per-sequence fill (0 stays 0 for inactive slots, which zeroes
+    their attention output too).
     """
     bt, lens = cache["block_tables"], cache["len"]
     num_pages, pg = cache[pool_key].shape[1], cache[pool_key].shape[2]
-    idx = jnp.clip(lens // pg, 0, bt.shape[1] - 1)
-    page = jnp.take_along_axis(bt, idx[:, None], axis=1)[:, 0]
-    page = jnp.where(page < 0, num_pages, page)
+    pos = lens[:, None] + jnp.arange(s)[None, :]  # (B, S)
+    idx = jnp.clip(pos // pg, 0, bt.shape[1] - 1)
+    page = jnp.take_along_axis(bt, idx, axis=1)
+    # positions past the block table (a speculative tail poking beyond a
+    # request's last page) must DROP, never clip onto a live page
+    page = jnp.where((page < 0) | (pos // pg > bt.shape[1] - 1),
+                     num_pages, page)
     active = bt[:, 0] >= 0
-    new_len = jnp.where(active, lens + 1, 0)
-    return page, lens % pg, new_len
+    new_len = jnp.where(active, lens + s, 0)
+    return page, pos % pg, new_len
 
 
 # ---------------------------------------------------------------------------
@@ -144,19 +150,24 @@ def gqa_apply(p, cfg, x, positions, cache=None, *, bidirectional=False):
             out = softmax_attend(q, k, v, mask)
         new_cache = None
     elif "k_pages" in cache:
-        # paged decode: write the token into its pool page, attend
-        # through the block table (O(own kv_len) per sequence)
-        assert s == 1, f"paged GQA cache is decode-only, got S={s}"
-        page, slot, new_len = _paged_token_coords(cache, "k_pages")
+        # paged decode (S=1) / speculative verify (S>1): write the S
+        # tokens into their pool pages, attend through the block table
+        # (O(own kv_len) per sequence)
+        page, slot, new_len = _paged_token_coords(cache, "k_pages", s)
         if cache["k_pages"].dtype == jnp.int8:
             from repro.serve.kv_cache import quant_page_update
 
-            kp, ksc = quant_page_update(
-                cache["k_pages"], cache["k_scales"], page, slot,
-                k[:, 0].transpose(1, 0, 2))
-            vp, vsc = quant_page_update(
-                cache["v_pages"], cache["v_scales"], page, slot,
-                v[:, 0].transpose(1, 0, 2))
+            kp, ksc = cache["k_pages"], cache["k_scales"]
+            vp, vsc = cache["v_pages"], cache["v_scales"]
+            # sequential inserts: token j's requant sees tokens < j of
+            # the same page live, rows past its own slot zeroed
+            for j in range(s):
+                kp, ksc = quant_page_update(
+                    kp, ksc, page[:, j], slot[:, j],
+                    k[:, j].transpose(1, 0, 2))
+                vp, vsc = quant_page_update(
+                    vp, vsc, page[:, j], slot[:, j],
+                    v[:, j].transpose(1, 0, 2))
             out = paged_decode_attend(
                 q, kp, vp, cache["block_tables"], new_len,
                 window=cfg.sliding_window, k_scales=ksc, v_scales=vsc)
@@ -164,9 +175,9 @@ def gqa_apply(p, cfg, x, positions, cache=None, *, bidirectional=False):
                          "k_scales": ksc, "v_scales": vsc}
         else:
             kp = cache["k_pages"].at[:, page, slot].set(
-                k[:, 0].transpose(1, 0, 2), mode="drop")
+                k.transpose(2, 0, 1, 3), mode="drop")
             vp = cache["v_pages"].at[:, page, slot].set(
-                v[:, 0].transpose(1, 0, 2), mode="drop")
+                v.transpose(2, 0, 1, 3), mode="drop")
             out = paged_decode_attend(q, kp, vp, cache["block_tables"],
                                       new_len, window=cfg.sliding_window)
             new_cache = {"k_pages": kp, "v_pages": vp}
@@ -362,15 +373,17 @@ def mla_apply(p, cfg, x, positions, cache=None):
         out = _mla_attend(p, cfg, q_nope, q_rope, ckv, k_rope, mask)
         new_cache = None
     elif "kv_pages" in cache:
-        # paged decode: one [c_kv | k_rope] row per token in the pool
-        assert s == 1, f"paged MLA cache is decode-only, got S={s}"
-        page, slot, new_len = _paged_token_coords(cache, "kv_pages")
-        row = jnp.concatenate([ckv, k_rope], axis=-1)[:, 0]  # (B, r+dr)
+        # paged decode (S=1) / speculative verify (S>1): one
+        # [c_kv | k_rope] row per token in the pool
+        page, slot, new_len = _paged_token_coords(cache, "kv_pages", s)
+        row = jnp.concatenate([ckv, k_rope], axis=-1)  # (B, S, r+dr)
         if cache["kv_pages"].dtype == jnp.int8:
             from repro.serve.kv_cache import quant_page_update
 
-            pool, ksc = quant_page_update(
-                cache["kv_pages"], cache["kv_scales"], page, slot, row[None])
+            pool, ksc = cache["kv_pages"], cache["kv_scales"]
+            for j in range(s):
+                pool, ksc = quant_page_update(
+                    pool, ksc, page[:, j], slot[:, j], row[None, :, j])
             out = _mla_attend_absorbed_paged(p, cfg, q_nope, q_rope, pool,
                                              cache["block_tables"], new_len,
                                              scales=ksc)

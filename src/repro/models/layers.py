@@ -442,12 +442,15 @@ def decode_attend(q, k, v, *, kv_len, window: int = 0,
 def paged_decode_attend(q, k_pages, v_pages, block_tables, kv_lens, *,
                         window: int = 0, scale: float | None = None,
                         dv: int | None = None, k_scales=None, v_scales=None):
-    """Single-token decode attention over a paged KV pool.
+    """Decode attention over a paged KV pool (S=1 decode; S>1 verifies
+    S consecutive positions per sequence, the speculative-decoding
+    verify step).
 
-    q: (B,1,H,D); k_pages/v_pages: (Hkv, num_pages, page_size, W) shared
+    q: (B,S,H,D) — position of query s is ``kv_lens[b] - S + s``;
+    k_pages/v_pages: (Hkv, num_pages, page_size, W) shared
     pools; block_tables: (B, pages_per_seq) int32 page indices (-1 past
     a sequence's live pages / for inactive slots); kv_lens: (B,)
-    per-sequence live token counts INCLUDING the just-written token
+    per-sequence live token counts INCLUDING the just-written token(s)
     (0 = inactive slot, output exactly zero).  ``dv`` restricts values
     to the leading columns of ``v_pages`` (the MLA shared-pool trick).
     int8 pools pass their (Hkv, num_pages) per-page-per-head
@@ -497,16 +500,19 @@ def paged_decode_attend_ref(q, k_pages, v_pages, block_tables, kv_lens, *,
     vd = gather(v_pages, dv, v_scales).astype(jnp.float32)
     lens = jnp.asarray(kv_lens, jnp.int32)
     kv_pos = jnp.arange(t)
-    mask = kv_pos[None, :] < lens[:, None]  # (B, T)
+    # query s of sequence b sits at absolute position lens[b] - S + s;
+    # each attends its own causal (and window) range
+    q_pos = lens[:, None] - s + jnp.arange(s)[None, :]  # (B, S)
+    mask = kv_pos[None, None, :] <= q_pos[:, :, None]  # (B, S, T)
     if window > 0:
-        mask &= kv_pos[None, :] > (lens[:, None] - 1 - window)
+        mask &= kv_pos[None, None, :] > (q_pos[:, :, None] - window)
 
-    qg = (q.astype(jnp.float32) * scale).reshape(b, hkv, g, d)
-    logits = jnp.einsum("bhgd,bthd->bhgt", qg, kd)
-    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    qg = (q.astype(jnp.float32) * scale).reshape(b, s, hkv, g, d)
+    logits = jnp.einsum("bshgd,bthd->bshgt", qg, kd)
+    logits = jnp.where(mask[:, :, None, None, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhgt,bthd->bhgd", probs, vd)
+    out = jnp.einsum("bshgt,bthd->bshgd", probs, vd)
     # fully-masked rows (inactive slots) must be exactly zero, like the
     # kernel's all-dead combine
-    out = out * (lens > 0)[:, None, None, None]
-    return out.reshape(b, 1, h, dv).astype(q.dtype)
+    out = out * (lens > 0)[:, None, None, None, None]
+    return out.reshape(b, s, h, dv).astype(q.dtype)

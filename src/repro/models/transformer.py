@@ -447,6 +447,38 @@ def _paged_decode_step(params, cfg, token, caches):
     return _head(params, cfg, x), new_caches
 
 
+def verify_step(params, cfg, tokens, caches):
+    """Speculative-decoding verify: score ``tokens`` (B, S) — the
+    slot's last emitted token followed by S-1 draft proposals — in ONE
+    multi-token paged step.
+
+    Each token's K/V is written at positions ``lens .. lens + S - 1``
+    and all S head positions return, so the engine gets the target
+    model's greedy choice at every draft position from a single batched
+    dispatch — the step a non-speculative engine would take S calls
+    for.  ``lens`` is returned UNCHANGED: the engine owns advancement
+    (it adds 1 + the accepted-prefix length per slot), and rejected
+    positions need no physical rollback — their rows sit at/after the
+    advanced ``lens``, masked out of every later attend and overwritten
+    once decoding reaches them (for int8 pools a rejected row that grew
+    its page's scale re-rounds the page once — the documented
+    quantization caveat).
+    """
+    x = _embed(params, cfg, tokens, None)
+    lens = caches["lens"]
+    bt = caches["block_tables"]
+    s = tokens.shape[1]
+    positions = lens[:, None] + jnp.arange(s)[None, :]
+    new_blocks = []
+    for li, pool in enumerate(caches["blocks"]):
+        p = jax.tree.map(lambda a: a[li], params["blocks"])
+        cache_i = dict(pool, block_tables=bt, len=lens)
+        x, nc, _ = block_apply(p, cfg, x, positions, cache_i)
+        new_blocks.append(nc)
+    new_caches = {"blocks": new_blocks, "block_tables": bt, "lens": lens}
+    return _head(params, cfg, x), new_caches
+
+
 def _cache_len(cfg, caches):
     if cfg.attn_every:  # hybrid: Mamba caches carry no position
         return caches["shared_attn"]["len"][0]

@@ -37,7 +37,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve import kv_cache
-from repro.serve.step import make_prefill_step, make_serve_step
+from repro.serve.step import (
+    make_prefill_step,
+    make_serve_step,
+    make_verify_step,
+)
 
 
 @dataclasses.dataclass
@@ -77,6 +81,25 @@ class ServingEngine:
     budget admits ~4x the concurrent sequences at int8 vs f32 (~2x vs
     bf16).  Prefill still runs in ``dtype``; pages quantize at scatter
     time.
+
+    ``prefix_cache=True`` turns on prefix sharing: admitted prompts are
+    indexed in a radix tree over page-granular token chunks, and a new
+    request whose prompt shares a cached prefix pins those pages
+    (refcount++), seeds a dense cache from them, and prefills ONLY the
+    unseen suffix — a partially-filled shared tail page is COW-forked
+    before the sequence writes into it.  Retirement re-inserts prompt +
+    generated tokens and releases the slot's references; under pool
+    pressure admission evicts unpinned LRU tree pages.
+
+    ``draft_params``/``draft_cfg`` + ``spec_k`` turn on speculative
+    decoding: the draft (same vocab, its own fully-backed paged cache
+    in lockstep with the target's lengths) proposes ``spec_k`` tokens
+    per slot per step, the target verifies all of them in ONE
+    multi-token paged step, and the longest matching prefix plus the
+    target's own next token is emitted — greedy output is exactly the
+    non-speculative sequence, rejected rows need no physical rollback
+    (they sit at/after the advanced length, masked and later
+    overwritten).
     """
 
     def __init__(self, params, cfg, *, max_slots: int = 4,
@@ -84,7 +107,9 @@ class ServingEngine:
                  num_pages: int | None = None, prefill_chunk: int = 64,
                  dtype=jnp.float32, eos_id: int | None = None,
                  kv_dtype: str | None = None,
-                 pool_bytes: int | None = None):
+                 pool_bytes: int | None = None,
+                 prefix_cache: bool = False,
+                 draft_params=None, draft_cfg=None, spec_k: int = 4):
         if not kv_cache.supports_paged(cfg):
             raise NotImplementedError(
                 f"ServingEngine: {cfg.name} ({cfg.family}) has recurrent/"
@@ -123,7 +148,53 @@ class ServingEngine:
                                 donate_argnums=(2,))
         self._decode = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
         self._copy = jax.jit(kv_cache.write_prompt_pages, donate_argnums=(0,))
+        if prefix_cache and not self._dyn_prefill:
+            raise NotImplementedError(
+                "prefix cache needs the dynamic (resumable) prefill path — "
+                "an SWA rolling buffer cannot seed a mid-sequence resume")
+        self.prefix = (
+            kv_cache.RadixPrefixCache(self.allocator, page_size,
+                                      full_pages_only=self.kv_dtype == "int8")
+            if prefix_cache else None)
+        self._seed = jax.jit(kv_cache.seed_prefix_dense, donate_argnums=(0,))
+        self._fork = jax.jit(kv_cache.fork_page, donate_argnums=(0,))
+        # speculative decoding: a small same-vocab draft proposes spec_k
+        # tokens; the target verifies all of them in one multi-token step
+        self.spec_k = int(spec_k) if draft_params is not None else 0
+        self.draft_params, self.draft_cfg = draft_params, draft_cfg
+        if draft_params is not None:
+            if draft_cfg is None or draft_cfg.vocab != cfg.vocab:
+                raise ValueError(
+                    "speculative decoding needs a draft_cfg sharing the "
+                    "target's vocab")
+            if (not kv_cache.supports_paged(draft_cfg)
+                    or draft_cfg.sliding_window):
+                raise NotImplementedError(
+                    "draft must be a plain (non-SWA) paged-attention config")
+            dkv = "bf16" if dtype == jnp.bfloat16 else "f32"
+            dc = tf.init_caches(draft_cfg, max_slots, max_len, dtype,
+                                cache_layout="paged", page_size=page_size,
+                                num_pages=max_slots * self.max_pp,
+                                kv_dtype=dkv)
+            self.draft_blocks = dc["blocks"]
+            # the draft pool fully backs every slot, so block tables are
+            # STATIC: slot s owns pages [s*max_pp, (s+1)*max_pp) and its
+            # lengths simply mirror the target's — no allocator needed
+            self._draft_bt = np.arange(
+                max_slots * self.max_pp, dtype=np.int32
+            ).reshape(max_slots, self.max_pp)
+            self._draft_prefill = jax.jit(
+                make_prefill_step(draft_cfg, chunk=prefill_chunk),
+                donate_argnums=(2,))
+            self._draft_decode = jax.jit(make_serve_step(draft_cfg),
+                                         donate_argnums=(2,))
+            self._verify = jax.jit(make_verify_step(cfg), donate_argnums=(2,))
+            self._draft_copy = jax.jit(kv_cache.write_prompt_pages,
+                                       donate_argnums=(0,))
         self.steps = 0
+        self._admitted = self._rejected = 0
+        self._prompt_tokens = self._prefilled_tokens = 0
+        self._spec_steps = self._spec_slot_steps = self._spec_emitted = 0
 
     # -- submission ---------------------------------------------------------
 
@@ -134,6 +205,7 @@ class ServingEngine:
         # that can never be admitted would block the FIFO queue forever
         if (need > min(self.max_pp, self.num_pages)
                 or len(prompt) >= self.max_len):
+            self._rejected += 1
             raise ValueError(
                 f"prompt+max_new ({len(prompt)}+{max_new}) exceeds "
                 f"max_len {self.max_len} / pool of {self.num_pages} "
@@ -155,8 +227,12 @@ class ServingEngine:
     # -- scheduling ---------------------------------------------------------
 
     def _pages_for_request(self, req: Request) -> int:
-        return kv_cache.pages_for(len(req.prompt) + req.max_new,
-                                  self.page_size)
+        # +spec_k: a verify step writes up to spec_k rows past the last
+        # accepted position; the extra headroom keeps those speculative
+        # writes on owned pages (past-capacity writes drop in-kernel,
+        # which only costs re-derivation after a truncation)
+        want = len(req.prompt) + req.max_new + self.spec_k
+        return min(kv_cache.pages_for(want, self.page_size), self.max_pp)
 
     def _admit(self) -> None:
         """FIFO admission: fill free slots while the head-of-queue's
@@ -165,15 +241,41 @@ class ServingEngine:
         for slot_id, slot in enumerate(self.slots):
             if not self._queue or slot.req is not None:
                 continue
-            need = self._pages_for_request(self._queue[0])
-            if not self.allocator.can_alloc(need):
-                break
-            req = self._queue.pop(0)
-            self._prefill_into(slot_id, slot, req,
-                               self.allocator.alloc(need))
+            req = self._queue[0]
+            need = self._pages_for_request(req)
+            m, shared = 0, []
+            if self.prefix is not None:
+                # cap the hit at n-1: at least one suffix token must run
+                # through prefill to produce the first output logits
+                # (an int8 tree additionally rounds the hit down to a
+                # page boundary — see RadixPrefixCache.full_pages_only)
+                m, shared = self.prefix.lookup(req.prompt[:-1])
+            fork = m % self.page_size != 0
+            fresh_n = need - len(shared) + (1 if fork else 0)
+            if not self.allocator.can_alloc(fresh_n):
+                if self.prefix is not None:
+                    self.prefix.evict(fresh_n - self.allocator.num_free)
+                if not self.allocator.can_alloc(fresh_n):
+                    self.allocator.release(shared)
+                    break  # FIFO: don't skip ahead of the head-of-queue
+            fresh = self.allocator.alloc(fresh_n)
+            if fork:
+                # the shared tail page is partially filled: this slot
+                # will write into it, so copy-on-write it into a fresh
+                # page and drop our reference to the shared original
+                self.blocks = self._fork(self.blocks,
+                                         jnp.int32(shared[-1]),
+                                         jnp.int32(fresh[0]))
+                self.allocator.release([shared[-1]])
+                pages = shared[:-1] + fresh
+            else:
+                pages = shared + fresh
+            self._queue.pop(0)
+            self._prefill_into(slot_id, slot, req, pages, n_prefix=m)
 
-    def _prefill_into(self, slot_id, slot, req, pages) -> None:
-        n = len(req.prompt)
+    def _prefill_into(self, slot_id, slot, req, pages, n_prefix=0) -> None:
+        n, m = len(req.prompt), n_prefix
+        ns = n - m  # unseen suffix: the only tokens that run the model
         self.block_tables[slot_id, :] = -1
         self.block_tables[slot_id, :len(pages)] = pages
         # batch-1 dense prefill in the DYNAMIC-length contract: the
@@ -181,13 +283,25 @@ class ServingEngine:
         # jit boundary and the real length rides as a traced scalar —
         # one compile per bucket, not per distinct prompt length
         t_pad = max(self._prefill_chunk,
-                    -(-n // self._prefill_chunk) * self._prefill_chunk)
+                    -(-ns // self._prefill_chunk) * self._prefill_chunk)
         if self._dyn_prefill:
-            prompt = np.zeros((1, t_pad), np.int32)
-            prompt[0, :n] = req.prompt
-            dense = self._tf.init_caches(self.cfg, 1, t_pad, self._dtype)
-            tok, dense = self._prefill(self.params, jnp.asarray(prompt),
-                                       dense, n_tokens=jnp.int32(n))
+            suffix = np.zeros((1, t_pad), np.int32)
+            suffix[0, :ns] = req.prompt[m:]
+            # the dense cache must hold prefix + suffix; bucket its
+            # capacity the same way so prefix hits don't add compiles
+            c_pad = max(t_pad,
+                        -(-(m + t_pad) // self._prefill_chunk)
+                        * self._prefill_chunk)
+            dense = self._tf.init_caches(self.cfg, 1, c_pad, self._dtype)
+            if m:
+                # gather the cached prefix rows into the dense cache and
+                # set len=m: prefill resumes at position m, attending
+                # over the seeded rows without recomputing them
+                dense = self._seed(dense, self.blocks,
+                                   jnp.asarray(self.block_tables[slot_id]),
+                                   jnp.int32(m))
+            tok, dense = self._prefill(self.params, jnp.asarray(suffix),
+                                       dense, n_tokens=jnp.int32(ns))
         else:  # SWA: pad rows would shift the rolling buffer
             dense = self._tf.init_caches(self.cfg, 1, t_pad, self._dtype)
             tok, dense = self._prefill(self.params,
@@ -197,9 +311,35 @@ class ServingEngine:
         w = self.cfg.sliding_window
         t_buf = min(t_pad, w) if w else t_pad
         row0 = n - t_buf if (w and t_buf <= w) else 0
+        # row_lo=m: rows < m came from shared pages this slot may only
+        # READ — scatter back just what this prefill computed
         self.blocks = self._copy(self.blocks, dense["blocks"],
                                  jnp.asarray(self.block_tables[slot_id]),
-                                 jnp.int32(n), jnp.int32(row0))
+                                 jnp.int32(n), jnp.int32(row0),
+                                 jnp.int32(m))
+        if self.spec_k:
+            # draft prefill: FULL prompt (the draft shares no pages, so
+            # no prefix shortcut), into the slot's static draft pages
+            dpad = max(self._prefill_chunk,
+                       -(-n // self._prefill_chunk) * self._prefill_chunk)
+            dprompt = np.zeros((1, dpad), np.int32)
+            dprompt[0, :n] = req.prompt
+            ddense = self._tf.init_caches(self.draft_cfg, 1, dpad,
+                                          self._dtype)
+            _, ddense = self._draft_prefill(self.draft_params,
+                                            jnp.asarray(dprompt), ddense,
+                                            n_tokens=jnp.int32(n))
+            self.draft_blocks = self._draft_copy(
+                self.draft_blocks, ddense["blocks"],
+                jnp.asarray(self._draft_bt[slot_id]),
+                jnp.int32(n), jnp.int32(0))
+        self._admitted += 1
+        self._prompt_tokens += n
+        self._prefilled_tokens += ns if self._dyn_prefill else n
+        if self.prefix is not None:
+            # index the prompt right away so concurrent admissions in
+            # the same wave share it too
+            self.prefix.insert(req.prompt, pages)
         now = time.perf_counter()
         req.t_first = now
         req.tokens.append(int(tok[0]))
@@ -211,7 +351,17 @@ class ServingEngine:
     def _retire(self, slot_id, slot) -> None:
         req = slot.req
         req.t_done = time.perf_counter()
-        self.allocator.free(slot.pages)
+        if self.prefix is not None:
+            # index prompt + generated tokens: rows [0, length) are
+            # valid, and row j holds the KV of sequence token j — the
+            # LAST generated token never ran through the model, so it
+            # has no row and stays out of the index
+            seq = np.concatenate(
+                [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
+            self.prefix.insert(seq[:slot.length], slot.pages)
+            self.allocator.release(slot.pages)
+        else:
+            self.allocator.free(slot.pages)
         self.block_tables[slot_id, :] = -1
         self._done.append(req)
         slot.req, slot.pages, slot.length = None, [], 0
@@ -235,6 +385,10 @@ class ServingEngine:
                 self._retire(sid, slot)
         if self.active == 0:
             return 0
+        if self.spec_k:
+            produced = self._spec_step()
+            self.steps += 1
+            return produced
 
         last = np.zeros((self.max_slots, 1), np.int32)
         for sid, slot in enumerate(self.slots):
@@ -265,6 +419,82 @@ class ServingEngine:
                 req.max_new = len(req.tokens)  # truncate: eos ends it
         return produced
 
+    def _spec_step(self) -> int:
+        """One speculative round over the active slots: draft proposes
+        ``spec_k`` tokens, the target verifies all of them in one
+        multi-token paged step, the longest matching prefix plus the
+        target's own continuation is emitted.
+
+        Correctness: ``greedy[:, j]`` is the target's greedy token
+        after the true sequence extended by proposals ``1..j``; the
+        accept scan stops at the first mismatch, so every emitted token
+        equals what non-speculative greedy decode would have produced
+        (induction over columns).  Rejected rows sit at/after the
+        advanced length — masked by every later attend and overwritten
+        by later writes — so no physical rollback is needed.
+        """
+        k = self.spec_k
+        last = np.zeros((self.max_slots, 1), np.int32)
+        for sid, slot in enumerate(self.slots):
+            if slot.req is not None:
+                last[sid, 0] = slot.req.tokens[-1]
+        lens = np.array([s.length for s in self.slots], np.int32)
+        # draft chain: k+1 sequential single-token steps — outputs
+        # 0..k-1 are the proposals, the extra step writes the LAST
+        # proposal's KV row so the draft cache stays in lockstep with
+        # the target after a full acceptance
+        dcaches = {
+            "blocks": self.draft_blocks,
+            "block_tables": jnp.asarray(self._draft_bt),
+            "lens": jnp.asarray(lens),
+        }
+        tok, chain = jnp.asarray(last), []
+        for _ in range(k + 1):
+            tok, dcaches = self._draft_decode(self.draft_params, tok,
+                                              dcaches)
+            chain.append(tok)
+        self.draft_blocks = dcaches["blocks"]
+        props = np.asarray(jnp.concatenate(chain[:k], axis=1))  # (B, k)
+        caches = {
+            "blocks": self.blocks,
+            "block_tables": jnp.asarray(self.block_tables),
+            "lens": jnp.asarray(lens),
+        }
+        verify_in = np.concatenate([last, props], axis=1)  # (B, k+1)
+        greedy, caches = self._verify(self.params, jnp.asarray(verify_in),
+                                      caches)
+        self.blocks = caches["blocks"]
+        greedy = np.asarray(greedy)
+        now = time.perf_counter()
+        produced = 0
+        self._spec_steps += 1
+        for sid, slot in enumerate(self.slots):
+            req = slot.req
+            if req is None:
+                continue
+            self._spec_slot_steps += 1
+            a = 0
+            while a < k and props[sid, a] == greedy[sid, a]:
+                a += 1
+            appended = 0
+            for j in range(a + 1):
+                if req.done:
+                    break
+                t = int(greedy[sid, j])
+                req.tokens.append(t)
+                req.token_times.append(now)
+                appended += 1
+                if self.eos_id is not None and t == self.eos_id:
+                    req.max_new = len(req.tokens)  # truncate: eos ends it
+                    break
+            # advance by what was actually APPENDED (eos / max_new can
+            # truncate below a+1) — keeps length == n + len(tokens) - 1,
+            # the invariant every later step and retire-insert relies on
+            slot.length += appended
+            produced += appended
+            self._spec_emitted += appended
+        return produced
+
     def run(self, max_steps: int = 100_000) -> list[Request]:
         """Drive steps until every submitted request has retired."""
         for _ in range(max_steps):
@@ -282,16 +512,52 @@ class ServingEngine:
         done, self._done = self._done, []
         return done
 
+    # -- introspection ------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Counters for the run so far: admission, prefix-cache hit
+        rates (prefill tokens served from shared pages vs computed),
+        pool sharing, and speculative acceptance."""
+        s = {
+            "steps": self.steps,
+            "admitted": self._admitted,
+            "rejected": self._rejected,
+            "prompt_tokens": self._prompt_tokens,
+            "prefilled_tokens": self._prefilled_tokens,
+            "pages_free": self.allocator.num_free,
+            "pages_shared": self.allocator.num_shared,
+        }
+        if self.prefix is not None:
+            s.update(
+                prefix_lookups=self.prefix.lookups,
+                prefix_hits=self.prefix.hits,
+                prefix_hit_tokens=self.prefix.hit_tokens,
+                prefix_evicted_pages=self.prefix.evicted_pages,
+                prefix_nodes=self.prefix.num_nodes,
+            )
+        if self.spec_k:
+            s.update(
+                spec_k=self.spec_k,
+                spec_steps=self._spec_steps,
+                spec_slot_steps=self._spec_slot_steps,
+                spec_emitted=self._spec_emitted,
+                accepted_per_spec_step=(
+                    self._spec_emitted / max(self._spec_slot_steps, 1)),
+            )
+        return s
+
 
 def latency_stats(requests) -> dict:
     """p50/p99 per-token latency + request latency over a finished
     trace (seconds)."""
-    gaps, req_lat = [], []
+    gaps, req_lat, ttft = [], [], []
     for r in requests:
         ts = [r.t_submit] + r.token_times
         gaps += [b - a for a, b in zip(ts, ts[1:])]
         req_lat.append(r.t_done - r.t_submit)
+        ttft.append(r.t_first - r.t_submit)
     gaps.sort()
+    ttft.sort()
 
     def pct(xs, p):
         return xs[min(len(xs) - 1, int(p * len(xs)))]
@@ -300,5 +566,7 @@ def latency_stats(requests) -> dict:
         "tokens": sum(len(r.tokens) for r in requests),
         "token_p50_s": pct(gaps, 0.50),
         "token_p99_s": pct(gaps, 0.99),
+        "ttft_p50_s": pct(ttft, 0.50),
+        "ttft_p99_s": pct(ttft, 0.99),
         "request_mean_s": sum(req_lat) / len(req_lat),
     }

@@ -58,12 +58,17 @@ def pages_for(n_tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Free-list page allocator with exact accounting.
+    """Free-list page allocator with refcounted sharing.
 
     Pages are recycled LIFO so a retire-then-admit reuses hot pages.
     ``alloc`` is all-or-nothing (raises before handing out a partial
-    set); ``free`` rejects double-frees and foreign pages — the
-    invariants the engine trace test leans on.
+    set) and hands pages out at refcount 1.  Sharing is explicit:
+    ``ref`` pins a live page for another reader (the prefix cache, a
+    second sequence sharing a prompt prefix), ``release`` drops one
+    reference and recycles the page only when the LAST reader lets go.
+    ``free`` is the strict single-owner API: it rejects double-frees,
+    foreign pages AND pages other readers still hold — a shared page
+    must be ``release``d, never hard-freed out from under its readers.
     """
 
     def __init__(self, num_pages: int):
@@ -71,7 +76,7 @@ class PageAllocator:
             raise ValueError(f"num_pages must be positive, got {num_pages}")
         self.num_pages = num_pages
         self._free = list(range(num_pages - 1, -1, -1))
-        self._live: set[int] = set()
+        self._refs: dict[int, int] = {}
 
     @property
     def num_free(self) -> int:
@@ -79,7 +84,15 @@ class PageAllocator:
 
     @property
     def num_live(self) -> int:
-        return len(self._live)
+        return len(self._refs)
+
+    @property
+    def num_shared(self) -> int:
+        """Pages currently held by more than one reader."""
+        return sum(1 for r in self._refs.values() if r >= 2)
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
 
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
@@ -92,15 +105,248 @@ class PageAllocator:
                 f"requested {n} pages, {len(self._free)} free "
                 f"of {self.num_pages}")
         pages = [self._free.pop() for _ in range(n)]
-        self._live.update(pages)
+        for p in pages:
+            self._refs[p] = 1
         return pages
 
-    def free(self, pages) -> None:
+    def ref(self, pages) -> None:
+        """Pin live pages for an additional reader (refcount++)."""
         for p in pages:
-            if p not in self._live:
+            if p not in self._refs:
+                raise ValueError(f"cannot ref page {p}: not allocated")
+        for p in pages:
+            self._refs[p] += 1
+
+    def release(self, pages) -> None:
+        """Drop one reference per page; recycle at refcount zero."""
+        for p in pages:
+            if p not in self._refs:
                 raise ValueError(f"page {p} is not allocated (double free?)")
-            self._live.remove(p)
-            self._free.append(p)
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._free.append(p)
+
+    def free(self, pages) -> None:
+        """Single-owner free: rejects pages with live co-readers."""
+        for p in pages:
+            if p not in self._refs:
+                raise ValueError(f"page {p} is not allocated (double free?)")
+            if self._refs[p] > 1:
+                raise ValueError(
+                    f"page {p} has {self._refs[p] - 1} live reader(s) — "
+                    "release() shared pages instead of free()")
+        self.release(pages)
+
+
+# ---------------------------------------------------------------------------
+# radix prefix cache
+# ---------------------------------------------------------------------------
+
+
+def _common_prefix(a, b) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+class _RadixNode:
+    __slots__ = ("chunk", "page", "children", "last_used")
+
+    def __init__(self, chunk=(), page=-1):
+        self.chunk = chunk  # the <= page_size tokens this page holds
+        self.page = page    # pool page id (tree holds ONE allocator ref)
+        self.children = {}  # chunk tuple -> _RadixNode
+        self.last_used = 0
+
+
+class RadixPrefixCache:
+    """Radix tree over PAGE-GRANULAR token chunks → pool pages.
+
+    Classic radix trees split edges at arbitrary token offsets; here a
+    node IS one pool page, so edges can only be ≤ ``page_size`` tokens
+    and never split — the tree mirrors the physical page layout exactly
+    and a lookup's answer is directly a block-table prefix.  The tree
+    holds one allocator reference per adopted page; ``lookup`` pins a
+    second reference per returned page for the caller (the admitting
+    slot), so a hot prefix stays resident however many sequences read
+    it and however often eviction runs.
+
+    Partial-overlap matches are allowed (a node whose chunk shares only
+    its first ``o`` tokens with the query still contributes ``o``
+    tokens + its page): rows past the match are masked by the reader's
+    cache ``len`` and a reader never writes a shared page (the engine
+    COW-forks partially-filled tails), so stale tail rows are exactly
+    as harmless as a recycled page's garbage.  Lookup semantics are
+    therefore the max common prefix over all inserted sequences — the
+    brute-force oracle the tests check against.
+
+    ``full_pages_only`` (int8 pools) stops insertion at the last FULL
+    page: a partially-filled int8 page requantizes on every decode
+    write by its owner, which would silently re-round rows a sharing
+    reader already attends — full pages are immutable, so only they
+    may be shared.
+    """
+
+    def __init__(self, allocator: PageAllocator, page_size: int, *,
+                 full_pages_only: bool = False):
+        self.allocator = allocator
+        self.page_size = page_size
+        self.full_pages_only = full_pages_only
+        self.root = _RadixNode()
+        self.hit_tokens = 0   # cumulative prefill tokens served from cache
+        self.lookups = 0
+        self.hits = 0
+        self.evicted_pages = 0
+        self._tick = 0        # monotonic LRU clock
+
+    # -- introspection ------------------------------------------------------
+
+    def _walk(self):
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            for c in node.children.values():
+                yield node, c
+                stack.append(c)
+
+    @property
+    def num_nodes(self) -> int:
+        return sum(1 for _ in self._walk())
+
+    @property
+    def num_pages(self) -> int:
+        """Pages the tree currently holds a reference on."""
+        return self.num_nodes
+
+    # -- lookup -------------------------------------------------------------
+
+    def lookup(self, tokens):
+        """Longest cached prefix of ``tokens``.
+
+        Returns ``(match_len, pages)`` where ``pages`` maps positions
+        ``[0, match_len)`` page-by-page.  Every returned page is PINNED
+        (allocator refcount++) — the caller owns one reference per page
+        and must ``release`` them (retirement / trimming).
+        """
+        self._tick += 1
+        self.lookups += 1
+        pg = self.page_size
+        toks = [int(t) for t in tokens]
+        node, i, pages, match = self.root, 0, [], 0
+        while i < len(toks):
+            rem = tuple(toks[i:i + pg])
+            best = node.children.get(rem)  # exact fast path
+            best_o = len(rem) if best is not None else 0
+            if best is None:
+                for c in node.children.values():
+                    o = _common_prefix(c.chunk, rem)
+                    if o > best_o:
+                        best, best_o = c, o
+            if best is None or best_o == 0:
+                break
+            best.last_used = self._tick
+            pages.append(best.page)
+            match += best_o
+            if best_o < pg or best_o < len(best.chunk):
+                break  # partial overlap / partial chunk: path ends here
+            node, i = best, i + pg
+        if self.full_pages_only and match % pg:
+            # int8: a partially-matched page would have to be COW-forked
+            # and then REQUANTIZED by its new owner's writes — round the
+            # hit down so only whole immutable pages are ever served
+            match -= match % pg
+            pages = pages[:match // pg]
+        self.allocator.ref(pages)
+        if match:
+            self.hits += 1
+            self.hit_tokens += match
+        return match, pages
+
+    # -- insert -------------------------------------------------------------
+
+    def insert(self, tokens, pages) -> None:
+        """Record ``tokens`` (whose KV rows live in ``pages``, in page
+        order) in the tree.  Adopted pages gain a tree-owned reference;
+        the caller's references are untouched (a slot still releases
+        its own pages at retirement).  Duplicate chunks dedup onto the
+        existing node; a partial leaf overtaken by a longer chunk
+        upgrades in place (partial chunks are always leaves, so the
+        swap can't orphan descendants)."""
+        self._tick += 1
+        pg = self.page_size
+        toks = [int(t) for t in tokens]
+        chunks = [tuple(toks[i:i + pg]) for i in range(0, len(toks), pg)]
+        assert len(chunks) <= len(pages), (len(chunks), len(pages))
+        node = self.root
+        for ci, chunk in enumerate(chunks):
+            page = pages[ci]
+            if len(chunk) < pg and self.full_pages_only:
+                break  # int8: the partial tail requantizes — don't share
+            child = node.children.get(chunk)
+            if child is None:
+                for key, c in list(node.children.items()):
+                    o = _common_prefix(c.chunk, chunk)
+                    if o == len(chunk):
+                        # existing chunk extends ours: already covered
+                        c.last_used = self._tick
+                        return
+                    if o == len(c.chunk) and o < len(chunk):
+                        # partial leaf upgraded by this longer chunk
+                        if c.page != page:
+                            self.allocator.ref([page])
+                            self.allocator.release([c.page])
+                            c.page = page
+                        del node.children[key]
+                        c.chunk = chunk
+                        node.children[chunk] = c
+                        child = c
+                        break
+                if child is None:
+                    child = _RadixNode(chunk, page)
+                    self.allocator.ref([page])
+                    node.children[chunk] = child
+            child.last_used = self._tick
+            if len(chunk) < pg:
+                break  # partial tail: nothing descends past it
+            node = child
+
+    # -- eviction -----------------------------------------------------------
+
+    def evict(self, n_pages: int) -> int:
+        """Reclaim up to ``n_pages`` by dropping LRU LEAVES whose pages
+        have no reader but the tree (allocator refcount == 1) — a
+        pinned page is never evicted, an interior node never orphans
+        its descendants.  Freeing a leaf can expose its parent, so the
+        scan repeats until the quota is met or nothing is evictable.
+        Returns the number of pages actually freed."""
+        freed = 0
+        while freed < n_pages:
+            victims = [(c.last_used, parent, c) for parent, c in self._walk()
+                       if not c.children
+                       and self.allocator.refcount(c.page) == 1]
+            if not victims:
+                break
+            victims.sort(key=lambda v: v[0])
+            for _, parent, leaf in victims:
+                if freed >= n_pages:
+                    break
+                del parent.children[leaf.chunk]
+                self.allocator.release([leaf.page])
+                freed += 1
+                self.evicted_pages += 1
+        return freed
+
+    def clear(self) -> int:
+        """Drop every node (release all tree-held references)."""
+        nodes = [c for _, c in self._walk()]
+        self.allocator.release([c.page for c in nodes])
+        self.root = _RadixNode()
+        self.evicted_pages += len(nodes)
+        return len(nodes)
 
 
 # ---------------------------------------------------------------------------
@@ -206,12 +452,92 @@ def page_size_of(caches) -> int:
 
 
 # ---------------------------------------------------------------------------
+# prefix sharing: COW fork + prefix gather
+# ---------------------------------------------------------------------------
+
+
+def fork_page(paged_blocks, src, dst):
+    """Copy-on-write fork: duplicate pool page ``src`` into ``dst``
+    across every layer and every pool leaf (page rows AND int8 scales —
+    both have the page on axis 1).  The engine calls this when a new
+    reader's block table would otherwise point its WRITE position into
+    a shared, partially-filled tail page: the reader gets a private
+    copy to fill, the original stays byte-identical for its other
+    readers.  Pure function; the engine jits it with the pools donated.
+    """
+    return [{k: v.at[:, dst].set(v[:, src]) for k, v in pool.items()}
+            for pool in paged_blocks]
+
+
+def seed_prefix_dense(dense_caches, paged_blocks, block_row, n_prefix):
+    """Gather a cached prefix's page rows into a fresh batch-1 dense
+    cache so chunked ragged prefill can RESUME at ``n_prefix``.
+
+    The engine's prefill runs against a dense (1, T, ...) cache; a
+    prefix hit means rows [0, n_prefix) already exist in shared pool
+    pages.  This scatters them (dequantized for int8 pools) into the
+    dense buffers and sets every layer ``len`` to ``n_prefix`` — the
+    suffix's queries then attend the prefix exactly as if it had been
+    prefilled in this slot, at an O(n_prefix) copy instead of an
+    O(n_prefix) forward pass.  ``dense_caches`` must be freshly
+    initialized (rows at/past ``n_prefix`` stay zero and are masked by
+    ``len``).  Pure; jit with the dense caches donated.
+    """
+    blocks = dense_caches["blocks"]
+    mla = "kv_pages" in paged_blocks[0]
+    first = next(iter(paged_blocks[0].values()))
+    num_pages, pg = first.shape[1], first.shape[2]
+    quantized = first.dtype == jnp.int8
+    max_pp = block_row.shape[0]
+    t = (blocks["ckv"] if mla else blocks["k"]).shape[2]
+    pos = jnp.arange(t)
+    local = jnp.clip(pos // pg, 0, max_pp - 1)
+    page = block_row[local]
+    valid = (pos < n_prefix) & (page >= 0)
+    pagec = jnp.where(valid, page, 0)  # gather page 0, mask rows after
+    slot = pos % pg
+
+    def gather(pool, pages_key, scales_key, cols=None):
+        rows = pool[pages_key][:, pagec, slot]  # (Hkv|1, T, W)
+        if cols is not None:
+            rows = rows[..., cols[0]:cols[1]]
+        rows = rows.astype(jnp.float32)
+        if quantized:
+            rows = rows * pool[scales_key][:, pagec][..., None]
+        return rows * valid[None, :, None]
+
+    if mla:
+        r = blocks["ckv"].shape[-1]
+        ckv, krope = [], []
+        for pool in paged_blocks:
+            row = gather(pool, "kv_pages", "kv_scales")[0]  # (T, r+dr)
+            ckv.append(row[:, :r])
+            krope.append(row[:, r:])
+        new = {
+            "ckv": jnp.stack(ckv)[:, None].astype(blocks["ckv"].dtype),
+            "k_rope": jnp.stack(krope)[:, None].astype(
+                blocks["k_rope"].dtype),
+        }
+    else:
+        ks = [gather(pool, "k_pages", "k_scales").transpose(1, 0, 2)
+              for pool in paged_blocks]
+        vs = [gather(pool, "v_pages", "v_scales").transpose(1, 0, 2)
+              for pool in paged_blocks]
+        new = {
+            "k": jnp.stack(ks)[:, None].astype(blocks["k"].dtype),
+            "v": jnp.stack(vs)[:, None].astype(blocks["v"].dtype),
+        }
+    new["len"] = jnp.full_like(blocks["len"], n_prefix)
+    return {"blocks": new}
+
+
+# ---------------------------------------------------------------------------
 # prefill copy-in
 # ---------------------------------------------------------------------------
 
 
 def write_prompt_pages(paged_blocks, dense_blocks, block_row, n_tokens,
-                       row0_pos=0):
+                       row0_pos=0, row_lo=0):
     """Scatter one request's dense-prefill cache rows into its pages.
 
     paged_blocks: the per-layer pool list from :func:`init_paged_caches`;
@@ -224,8 +550,15 @@ def write_prompt_pages(paged_blocks, dense_blocks, block_row, n_tokens,
     SWA rolling buffer (ordered snapshot: slot j holds position
     ``len - t + j``).  Rows mapping outside [0, n_tokens) — pad rows,
     unwritten rolling slots, -1 table tails — scatter out of bounds and
-    are dropped.  Pure function; the engine jits it with the pools
-    donated.
+    are dropped.
+
+    ``row_lo`` (traced ok) additionally drops rows BELOW a position: a
+    prefix-cache hit means positions [0, row_lo) live in SHARED pages
+    that must not be rewritten — only the freshly-prefilled suffix
+    scatters, and int8 scale rows stay untouched for pages wholly below
+    ``row_lo`` (the engine page-aligns ``row_lo`` on int8 pools, so a
+    scale-scattered page never holds shared rows).  Pure function; the
+    engine jits it with the pools donated.
     """
     first = next(iter(paged_blocks[0].values()))
     num_pages, pg = first.shape[1], first.shape[2]
@@ -243,13 +576,16 @@ def write_prompt_pages(paged_blocks, dense_blocks, block_row, n_tokens,
     pos = jnp.arange(t) + row0_pos  # logical position of each dense row
     local = jnp.clip(pos // pg, 0, max_pp - 1)
     page = block_row[local]
-    valid = (pos >= 0) & (pos < n_tokens) & (page >= 0)
+    valid = (pos >= 0) & (pos >= row_lo) & (pos < n_tokens) & (page >= 0)
     page = jnp.where(valid, page, num_pages)
     slot = pos % pg
-    # scale scatter targets: every MAPPED page of this request — pages
-    # reserved beyond the prompt get the eps scale (their recycled int8
-    # garbage dequantizes to ~0 until the decode write overwrites them)
-    spage = jnp.where(block_row >= 0, block_row, num_pages)
+    # scale scatter targets: every MAPPED page of this request from the
+    # first non-shared page on — pages reserved beyond the prompt get
+    # the eps scale (their recycled int8 garbage dequantizes to ~0
+    # until the decode write overwrites them); pages below row_lo are
+    # shared prefix pages and keep their existing scales
+    owned = jnp.arange(max_pp) >= row_lo // pg
+    spage = jnp.where((block_row >= 0) & owned, block_row, num_pages)
 
     def _page_quant(rows):
         """rows: (T, ..., W) f32 -> (q rows, per-page scales (max_pp, ...))

@@ -167,6 +167,19 @@ def make_serve_step(cfg):
     return serve_step
 
 
+def make_verify_step(cfg):
+    """Speculative verify: (params, tokens (B, S), caches) ->
+    (greedy (B, S) int32, caches).  Column j of the output is the
+    target model's greedy token AFTER seeing tokens[:, :j+1] — compare
+    against the draft's proposals to find the accepted prefix.  Paged
+    caches only (the engine's layout)."""
+    def verify(params, tokens, caches):
+        logits, caches = transformer.verify_step(params, cfg, tokens, caches)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    return verify
+
+
 def generate(params, cfg, prompt, max_new: int, max_len: int, dtype=jnp.bfloat16,
              frames=None, embeds=None):
     """Simple greedy generation loop (examples/tests; not the dry-run).

@@ -1,0 +1,437 @@
+"""Prefix-sharing radix KV cache + speculative decoding (ISSUE-6).
+
+Covers: refcounted-allocator invariants under randomized alloc / ref /
+release / free churn (a model-checker style sweep against a dict
+mirror); radix-tree longest-prefix lookups vs a brute-force oracle over
+every inserted sequence; copy-on-write page forks (bitwise copy of
+every pool leaf, engine parity at EVERY tail-page fill residue);
+multi-token (S > 1) paged verify attention vs the per-position S = 1
+oracle; and the engine end-to-end — prefix-cache admissions reproduce
+dense greedy exactly while skipping cached prefill tokens, speculative
+decoding (identical draft = full accepts, a foreign tiny draft =
+rejection path) emits bitwise-identical greedy tokens, and the int8
+pool keeps prefix hits page-aligned.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.kernels.decode_attention import paged_decode_attention
+from repro.models import transformer as tf
+from repro.models.layers import paged_decode_attend_ref
+from repro.serve import kv_cache
+from repro.serve.engine import ServingEngine, latency_stats
+from repro.serve.step import generate
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _common_prefix(a, b):
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+class TestRefcountedAllocator:
+    def test_shared_page_free_rejected(self):
+        alloc = kv_cache.PageAllocator(4)
+        (p,) = alloc.alloc(1)
+        alloc.ref([p])
+        with pytest.raises(ValueError, match="live reader"):
+            alloc.free([p])
+        alloc.release([p])  # second reader lets go
+        alloc.free([p])     # now single-owner free works
+        assert alloc.num_free == 4
+
+    def test_ref_dead_page_rejected(self):
+        alloc = kv_cache.PageAllocator(4)
+        with pytest.raises(ValueError):
+            alloc.ref([0])
+        (p,) = alloc.alloc(1)
+        alloc.free([p])
+        with pytest.raises(ValueError):
+            alloc.release([p])  # double free
+
+    def test_randomized_churn_invariants(self):
+        """Model-checker sweep: the allocator must agree with a plain
+        dict mirror after every operation, for 2000 random ops."""
+        rng = np.random.default_rng(0)
+        alloc = kv_cache.PageAllocator(32)
+        held = []           # one entry per reference we hold
+        model = {}          # page -> refcount mirror
+        for _ in range(2000):
+            op = int(rng.integers(0, 4))
+            if op == 0:
+                n = int(rng.integers(0, 4))
+                if alloc.can_alloc(n):
+                    for p in alloc.alloc(n):
+                        assert p not in model  # fresh pages only
+                        model[p] = 1
+                        held.append(p)
+            elif op == 1 and held:
+                p = held[int(rng.integers(len(held)))]
+                alloc.ref([p])
+                model[p] += 1
+                held.append(p)
+            elif op == 2 and held:
+                p = held.pop(int(rng.integers(len(held))))
+                alloc.release([p])
+                model[p] -= 1
+                if model[p] == 0:
+                    del model[p]
+            elif op == 3 and held:
+                p = held[int(rng.integers(len(held)))]
+                if model[p] == 1:
+                    alloc.free([p])
+                    held.remove(p)
+                    del model[p]
+                else:
+                    with pytest.raises(ValueError):
+                        alloc.free([p])
+            assert alloc.num_free + alloc.num_live == 32
+            assert alloc.num_live == len(model)
+            assert alloc.num_shared == sum(
+                1 for r in model.values() if r >= 2)
+            for p, r in model.items():
+                assert alloc.refcount(p) == r
+        alloc.release(held)
+        assert alloc.num_free == 32 and alloc.num_live == 0
+
+
+class TestRadixPrefixCache:
+    def test_lookup_matches_bruteforce_oracle(self):
+        """Lookup == max common prefix over ALL inserted sequences —
+        page-chunk granularity, partial-overlap matches, dedup and
+        partial-leaf upgrades must never change the answer."""
+        rng = np.random.default_rng(1)
+        for trial in range(25):
+            pg = int(rng.choice([2, 3, 4]))
+            alloc = kv_cache.PageAllocator(4096)
+            tree = kv_cache.RadixPrefixCache(alloc, pg)
+            inserted = []
+            for _ in range(12):
+                n = int(rng.integers(1, 20))
+                seq = rng.integers(0, 4, (n,)).tolist()  # tiny alphabet:
+                pages = alloc.alloc(kv_cache.pages_for(n, pg))  # collisions
+                tree.insert(seq, pages)
+                alloc.release(pages)  # the tree keeps its own refs
+                inserted.append(seq)
+                for _ in range(3):
+                    q = rng.integers(
+                        0, 4, (int(rng.integers(1, 24)),)).tolist()
+                    m, qpages = tree.lookup(q)
+                    want = max(
+                        (_common_prefix(q, s) for s in inserted), default=0)
+                    assert m == want, (trial, q, inserted)
+                    assert len(qpages) == kv_cache.pages_for(m, pg)
+                    alloc.release(qpages)  # drop the lookup pins
+            tree.clear()
+            assert alloc.num_free == 4096  # no page leaked through churn
+
+    def test_full_pages_only_stops_at_boundary(self):
+        alloc = kv_cache.PageAllocator(16)
+        tree = kv_cache.RadixPrefixCache(alloc, 4, full_pages_only=True)
+        pages = alloc.alloc(3)
+        tree.insert(list(range(10)), pages)  # 2 full pages + 2-row tail
+        m, qpages = tree.lookup(list(range(10)))
+        assert m == 8 and len(qpages) == 2  # tail page never shared
+        alloc.release(qpages)
+        alloc.release(pages)
+        assert tree.clear() == 2
+
+    def test_evict_spares_pinned_and_interior(self):
+        alloc = kv_cache.PageAllocator(16)
+        tree = kv_cache.RadixPrefixCache(alloc, 2)
+        pages = alloc.alloc(3)
+        tree.insert([1, 2, 3, 4, 5, 6], pages)  # chain of 3 nodes
+        alloc.release(pages)
+        m, pinned = tree.lookup([1, 2, 3, 4, 5, 6])
+        assert m == 6
+        # everything is pinned (lookup refs): nothing evictable
+        assert tree.evict(3) == 0
+        alloc.release(pinned)
+        # leaves-first: evicting 1 page takes the deepest node only
+        assert tree.evict(1) == 1 and tree.num_nodes == 2
+        # the rest drains parent-after-child via the rescan loop
+        assert tree.evict(8) == 2 and tree.num_nodes == 0
+        assert alloc.num_free == 16
+
+
+class TestCowFork:
+    def test_fork_copies_every_pool_leaf(self):
+        rng = np.random.default_rng(2)
+        blocks = [
+            {
+                "k_pages": jnp.asarray(
+                    rng.normal(size=(2, 4, 8, 16)).astype(np.float32)),
+                "v_pages": jnp.asarray(
+                    rng.normal(size=(2, 4, 8, 16)).astype(np.float32)),
+                "k_scales": jnp.asarray(
+                    rng.normal(size=(2, 4)).astype(np.float32)),
+                "v_scales": jnp.asarray(
+                    rng.normal(size=(2, 4)).astype(np.float32)),
+            }
+            for _ in range(2)
+        ]
+        out = kv_cache.fork_page(blocks, jnp.int32(1), jnp.int32(3))
+        for pool, ref in zip(out, blocks):
+            for key in pool:
+                np.testing.assert_array_equal(pool[key][:, 3], ref[key][:, 1])
+                np.testing.assert_array_equal(  # other pages untouched
+                    np.asarray(pool[key][:, :3]), np.asarray(ref[key][:, :3]))
+
+
+def _cfg_params():
+    cfg = get_config("qwen3_0p6b").scaled_down(num_layers=2, d_model=64,
+                                               vocab=256)
+    return cfg, tf.init(KEY, cfg, jnp.float32)
+
+
+def _assert_parity(params, cfg, done, reqs, max_len):
+    for r in done:
+        p, m = reqs[r.rid]
+        want = np.asarray(generate(params, cfg, jnp.asarray(p)[None],
+                                   max_new=m, max_len=max_len,
+                                   dtype=jnp.float32))[0]
+        assert np.array_equal(np.array(r.tokens), want), r.rid
+
+
+class TestVerifyAttention:
+    @pytest.mark.parametrize("window", [0, 12])
+    @pytest.mark.parametrize("s", [2, 4])
+    def test_multi_token_matches_per_position(self, s, window):
+        """S-row verify == S independent 1-row decodes where row j sees
+        kv_len - S + j + 1 keys (jnp ref AND Pallas interpret)."""
+        b, h, hkv, d, pg, npages = 3, 8, 4, 16, 8, 24
+        rng = np.random.default_rng(3)
+        lens = np.array([37, 8, s], np.int32)  # incl. the minimal case
+        kp = jnp.asarray(rng.normal(size=(hkv, npages, pg, d)) * 0.3)
+        vp = jnp.asarray(rng.normal(size=(hkv, npages, pg, d)) * 0.3)
+        kp, vp = kp.astype(jnp.float32), vp.astype(jnp.float32)
+        max_pp = kv_cache.pages_for(int(lens.max()), pg)
+        bt = -np.ones((b, max_pp), np.int32)
+        perm = rng.permutation(npages)
+        nxt = 0
+        for i in range(b):
+            for p in range(kv_cache.pages_for(int(lens[i]), pg)):
+                bt[i, p] = perm[nxt]
+                nxt += 1
+        bt = jnp.asarray(bt)
+        q = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+        lens_j = jnp.asarray(lens)
+        got_ref = paged_decode_attend_ref(q, kp, vp, bt, lens_j,
+                                          window=window)
+        got_pal = paged_decode_attention(q, kp, vp, bt, lens_j,
+                                         window=window, interpret=True)
+        for j in range(s):
+            want = paged_decode_attend_ref(
+                q[:, j:j + 1], kp, vp, bt, lens_j - (s - 1 - j),
+                window=window)
+            np.testing.assert_allclose(np.asarray(got_ref[:, j:j + 1]),
+                                       np.asarray(want), atol=1e-5)
+            np.testing.assert_allclose(np.asarray(got_pal[:, j:j + 1]),
+                                       np.asarray(want), atol=1e-5)
+
+
+class TestPrefixEngine:
+    def test_shared_prefix_parity_and_hit_accounting(self):
+        cfg, params = _cfg_params()
+        rng = np.random.default_rng(4)
+        base = rng.integers(0, cfg.vocab, (24,)).astype(np.int32)
+        reqs = [(np.concatenate(
+            [base, rng.integers(0, cfg.vocab, (t,)).astype(np.int32)]), 5)
+            for t in (5, 9, 13)]
+        reqs.append((rng.integers(0, cfg.vocab, (11,)).astype(np.int32), 4))
+        eng = ServingEngine(params, cfg, max_slots=2, max_len=128,
+                            page_size=8, prefill_chunk=8, prefix_cache=True)
+        free0 = eng.allocator.num_free
+        for p, m in reqs:
+            eng.submit(p, m)
+        done = eng.run()
+        _assert_parity(params, cfg, done, reqs, 128)
+        s = eng.stats()
+        assert s["prefix_hit_tokens"] >= 2 * len(base) - 16  # both sharers hit
+        assert s["prefilled_tokens"] == s["prompt_tokens"] - s[
+            "prefix_hit_tokens"]
+        assert (eng.block_tables == -1).all()
+        # only the tree holds pages now; clearing it must restore the pool
+        eng.prefix.clear()
+        assert eng.allocator.num_free == free0
+        st = latency_stats(done)
+        assert 0 <= st["ttft_p50_s"] <= st["ttft_p99_s"]
+
+    @pytest.mark.parametrize("tail", [1, 2, 3, 4])
+    def test_cow_fork_parity_at_every_fill_residue(self, tail):
+        """A second request resuming INSIDE a partially-filled shared
+        page must fork it — greedy output must survive every tail fill
+        level (m % page_size in 1..page_size)."""
+        cfg, params = _cfg_params()
+        rng = np.random.default_rng(5)
+        pg = 4
+        base = rng.integers(0, cfg.vocab, (8 + tail,)).astype(np.int32)
+        reqs = [
+            (np.concatenate([base, rng.integers(
+                0, cfg.vocab, (3,)).astype(np.int32)]), 3),
+            (np.concatenate([base, rng.integers(
+                0, cfg.vocab, (6,)).astype(np.int32)]), 3),
+        ]
+        # max_slots=1 serializes: request 1 hits request 0's retire-time
+        # insert, whose match ends mid-page exactly at len(base)
+        eng = ServingEngine(params, cfg, max_slots=1, max_len=64,
+                            page_size=pg, prefill_chunk=4,
+                            prefix_cache=True)
+        for p, m in reqs:
+            eng.submit(p, m)
+        done = eng.run()
+        _assert_parity(params, cfg, done, reqs, 64)
+        assert eng.stats()["prefix_hit_tokens"] >= len(base)
+
+    def test_int8_prefix_hits_stay_page_aligned(self):
+        cfg, params = _cfg_params()
+        rng = np.random.default_rng(6)
+        pg = 8
+        base = rng.integers(0, cfg.vocab, (21,)).astype(np.int32)
+        reqs = [(np.concatenate(
+            [base, rng.integers(0, cfg.vocab, (t,)).astype(np.int32)]), 4)
+            for t in (4, 7)]
+        eng = ServingEngine(params, cfg, max_slots=1, max_len=64,
+                            page_size=pg, prefill_chunk=8,
+                            prefix_cache=True, kv_dtype="int8")
+        for p, m in reqs:
+            eng.submit(p, m)
+        done = eng.run()
+        s = eng.stats()
+        # full_pages_only: every hit is a whole immutable page
+        assert s["prefix_hit_tokens"] > 0
+        assert s["prefix_hit_tokens"] % pg == 0
+        assert len(done) == 2 and (eng.block_tables == -1).all()
+
+    def test_eviction_under_pool_pressure(self):
+        """An undersized pool must evict unpinned tree pages instead of
+        deadlocking admission."""
+        cfg, params = _cfg_params()
+        rng = np.random.default_rng(7)
+        reqs = [(rng.integers(0, cfg.vocab, (16,)).astype(np.int32), 4)
+                for _ in range(4)]
+        # each request needs pages_for(16+4, 8) = 3 of 4 pool pages: the
+        # tree's references MUST give way for the next admission
+        eng = ServingEngine(params, cfg, max_slots=1, max_len=32,
+                            page_size=8, num_pages=4, prefill_chunk=8,
+                            prefix_cache=True)
+        for p, m in reqs:
+            eng.submit(p, m)
+        done = eng.run()
+        assert len(done) == 4
+        assert eng.stats()["prefix_evicted_pages"] > 0
+        _assert_parity(params, cfg, done, reqs, 32)
+
+    def test_swa_prefix_cache_rejected(self):
+        cfg = get_config("mixtral_8x22b").scaled_down(num_layers=2,
+                                                      d_model=64, vocab=256)
+        assert cfg.sliding_window
+        with pytest.raises(NotImplementedError):
+            ServingEngine({}, cfg, prefix_cache=True)
+
+
+class TestSpeculativeEngine:
+    def test_identical_draft_full_accept_parity(self):
+        """Draft == target: every proposal accepted, k+1 tokens per
+        slot-step (modulo max_new truncation), output EXACTLY greedy."""
+        cfg, params = _cfg_params()
+        rng = np.random.default_rng(8)
+        reqs = [(rng.integers(0, cfg.vocab, (n,)).astype(np.int32), m)
+                for n, m in [(7, 9), (19, 6), (12, 8), (5, 1)]]
+        eng = ServingEngine(params, cfg, max_slots=2, max_len=128,
+                            page_size=8, prefill_chunk=8,
+                            draft_params=params, draft_cfg=cfg, spec_k=3)
+        free0 = eng.allocator.num_free
+        for p, m in reqs:
+            eng.submit(p, m)
+        done = eng.run()
+        _assert_parity(params, cfg, done, reqs, 128)
+        s = eng.stats()
+        # identical models agree on every proposal: acceptance is full
+        # except where max_new truncates the final round
+        assert s["accepted_per_spec_step"] > 2.0, s
+        assert s["spec_emitted"] == sum(m for _, m in reqs) - s["admitted"]
+        assert eng.allocator.num_free == free0  # draft pool is static
+
+    def test_foreign_draft_rejection_path_parity(self):
+        """A tiny differently-seeded draft mostly MISSES — acceptance
+        collapses toward 1 token/step but output stays exactly greedy."""
+        cfg, params = _cfg_params()
+        dcfg = get_config("qwen3_0p6b").scaled_down(num_layers=1,
+                                                    d_model=32, vocab=256)
+        dparams = tf.init(jax.random.PRNGKey(7), dcfg, jnp.float32)
+        rng = np.random.default_rng(9)
+        reqs = [(rng.integers(0, cfg.vocab, (n,)).astype(np.int32), m)
+                for n, m in [(9, 7), (22, 5), (6, 6)]]
+        eng = ServingEngine(params, cfg, max_slots=2, max_len=128,
+                            page_size=8, prefill_chunk=8,
+                            draft_params=dparams, draft_cfg=dcfg, spec_k=3)
+        for p, m in reqs:
+            eng.submit(p, m)
+        done = eng.run()
+        _assert_parity(params, cfg, done, reqs, 128)
+        assert eng.stats()["accepted_per_spec_step"] >= 1.0  # the +1 floor
+
+    def test_prefix_plus_spec_combined_parity(self):
+        cfg, params = _cfg_params()
+        dcfg = get_config("qwen3_0p6b").scaled_down(num_layers=1,
+                                                    d_model=32, vocab=256)
+        dparams = tf.init(jax.random.PRNGKey(11), dcfg, jnp.float32)
+        rng = np.random.default_rng(10)
+        base = rng.integers(0, cfg.vocab, (20,)).astype(np.int32)
+        reqs = [(np.concatenate(
+            [base, rng.integers(0, cfg.vocab, (t,)).astype(np.int32)]), 6)
+            for t in (3, 8, 11)]
+        eng = ServingEngine(params, cfg, max_slots=2, max_len=128,
+                            page_size=8, prefill_chunk=8, prefix_cache=True,
+                            draft_params=dparams, draft_cfg=dcfg, spec_k=2)
+        for p, m in reqs:
+            eng.submit(p, m)
+        done = eng.run()
+        _assert_parity(params, cfg, done, reqs, 128)
+        s = eng.stats()
+        assert s["prefix_hit_tokens"] > 0 and s["spec_steps"] > 0
+
+    def test_int8_spec_agreement_gate(self):
+        """int8 verify re-rounds a page when rejected speculative rows
+        grow its scale, so bitwise parity isn't guaranteed — gate at
+        >= 90% token agreement with the non-speculative int8 engine."""
+        cfg, params = _cfg_params()
+        rng = np.random.default_rng(12)
+        reqs = [(rng.integers(0, cfg.vocab, (n,)).astype(np.int32), m)
+                for n, m in [(10, 8), (17, 6)]]
+
+        def run(**kw):
+            eng = ServingEngine(params, cfg, max_slots=2, max_len=128,
+                                page_size=8, prefill_chunk=8,
+                                kv_dtype="int8", **kw)
+            for p, m in reqs:
+                eng.submit(p, m)
+            return eng.run()
+
+        plain = {r.rid: r.tokens for r in run()}
+        spec = {r.rid: r.tokens for r in run(draft_params=params,
+                                             draft_cfg=cfg, spec_k=3)}
+        agree = total = 0
+        for rid, want in plain.items():
+            got = spec[rid]
+            assert len(got) == len(want)
+            agree += sum(a == b for a, b in zip(got, want))
+            total += len(want)
+        assert agree / total >= 0.9, (agree, total)
+
+    def test_mismatched_vocab_rejected(self):
+        cfg, params = _cfg_params()
+        dcfg = get_config("qwen3_0p6b").scaled_down(num_layers=1,
+                                                    d_model=32, vocab=128)
+        with pytest.raises(ValueError, match="vocab"):
+            ServingEngine(params, cfg, draft_params={}, draft_cfg=dcfg)
