@@ -1,0 +1,166 @@
+"""Fault-tolerance benchmarks: the detect -> replan -> reshard -> resume
+loop under injected faults, measured end to end.
+
+Three supervised training runs on 4 (fake) devices, identical data and
+init, archived per-PR in ``BENCH_ft.json``:
+
+1. **baseline** — fault-free 4-stage pipeline run: per-step wall clock
+   and the final loss every recovered run must reproduce.
+2. **straggler** — stage 2 turns 3x slow at step 6.  Measures detection
+   latency (slow steps until the monitor + rate-weighted DP produce a
+   *changed* cut vector), the re-cut decision, re-cut downtime (live
+   re-pad + re-jit), and the post-re-cut step-time improvement.
+3. **kill** — a device dies at step 12 (4 -> 3 stages) with checkpoints
+   every 5 steps.  Measures recovery time (mesh reform + re-sharded
+   restore + recompile) and steps lost (must be <= the checkpoint
+   period).
+
+The benchmark GATES on the recovery semantics, not just timings: a
+recovered run that fails to reach the fault-free final loss (rtol 5e-2
+— repadding and 3-stage replay reassociate float reductions, the math
+is unchanged) is a correctness bug, and the module raises.
+
+Skips (empty) when fewer than 4 devices are visible — CI runs it under
+``--xla_force_host_platform_device_count=4``.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+STEPS = 24
+SEQ, BATCH = 32, 8
+FAULT_STEP, FACTOR, SLOW_STAGE = 6, 3.0, 2
+KILL_STEP, CKPT_EVERY = 12, 5
+RTOL = 5e-2
+
+
+def _cfg():
+    from repro.configs.base import get_config
+
+    # 8 layers / 4 stages: even cuts [2,2,2,2] leave the DP real room to
+    # shrink the slow stage (6 layers would already sit at the 1-layer
+    # floor and make every re-cut a noop)
+    return get_config("qwen3_0p6b").scaled_down(
+        num_layers=8, d_model=64, vocab=256
+    )
+
+
+def _run(fault_plan=None, ckpt_dir=None, ckpt_every=0):
+    from repro.ft.supervisor import TrainSupervisor
+
+    sup = TrainSupervisor(
+        _cfg(), steps=STEPS, seq=SEQ, batch=BATCH, strategy="pipeline",
+        fault_plan=fault_plan, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+        seed=0,
+    )
+    return sup.run()
+
+
+def _parity(name: str, got: float, want: float) -> None:
+    if not abs(got - want) <= RTOL * abs(want):
+        raise AssertionError(
+            f"{name}: recovered final loss {got:.4f} != fault-free "
+            f"{want:.4f} (rtol {RTOL}) — recovery corrupted training")
+
+
+def _mean(xs) -> float:
+    return sum(xs) / max(len(xs), 1)
+
+
+def main():
+    import jax
+
+    if len(jax.devices()) < 4:
+        print("ft bench skipped: needs >= 4 devices "
+              "(set --xla_force_host_platform_device_count=4)")
+        print("\nname,us_per_call,derived")
+        return []
+
+    from repro.ft.faults import FaultPlan
+
+    rows = []
+
+    # -- 1. fault-free baseline --------------------------------------------
+    base = _run()
+    base_step = _mean(base.step_times)
+    print(f"baseline: final loss {base.final_loss:.4f}, "
+          f"{base_step * 1e3:.1f} ms/step, cuts {base.boundaries_history[0]}")
+    rows.append(("ft_baseline", base_step * 1e6,
+                 f"final_loss={base.final_loss:.4f};"
+                 f"cuts={'/'.join(map(str, base.boundaries_history[0]))}"))
+
+    # -- 2. straggler -> live re-cut ---------------------------------------
+    plan = FaultPlan.parse(
+        f"slowdown:step={FAULT_STEP},stage={SLOW_STAGE},factor={FACTOR:g}")
+    res = _run(fault_plan=plan)
+    recuts = res.events_of("recut")
+    if not recuts:
+        raise AssertionError(
+            f"straggler at stage {SLOW_STAGE} (factor {FACTOR}) was never "
+            f"mitigated in {STEPS - FAULT_STEP} slow steps")
+    ev = recuts[0]
+    detect = ev.step - FAULT_STEP + 1  # slow steps until a changed cut
+    mon_window = 8
+    if detect > mon_window:
+        raise AssertionError(
+            f"detection took {detect} slow steps — outside the monitor "
+            f"window ({mon_window}); the DP should re-cut far sooner")
+    old, new = ev.detail["old"], ev.detail["new"]
+    pre = [res.step_times[t] for t in range(FAULT_STEP, ev.step + 1)]
+    post = [res.step_times[t] for t in range(recuts[-1].step + 1, STEPS)]
+    if post and not _mean(post) < _mean(pre):
+        raise AssertionError(
+            f"re-cut did not help: {_mean(pre) * 1e3:.1f} ms/step slow, "
+            f"{_mean(post) * 1e3:.1f} ms/step after re-cut {old}->{new}")
+    _parity("straggler", res.final_loss, base.final_loss)
+    print(f"straggler: detected+re-cut after {detect} slow steps "
+          f"({old} -> {new}), re-cut downtime {ev.recovery_s * 1e3:.0f} ms, "
+          f"step time {_mean(pre) * 1e3:.1f} -> {_mean(post) * 1e3:.1f} ms, "
+          f"final loss {res.final_loss:.4f}")
+    rows.append((
+        "ft_straggler_recut", _mean(post or pre) * 1e6,
+        f"detect_steps={detect};"
+        f"cuts={'/'.join(map(str, old))}->{'/'.join(map(str, new))};"
+        f"recut_ms={ev.recovery_s * 1e3:.0f};"
+        f"slow_ms={_mean(pre) * 1e3:.1f};"
+        f"final_loss={res.final_loss:.4f}"))
+
+    # -- 3. device loss -> elastic restore ---------------------------------
+    ckpt_dir = tempfile.mkdtemp(prefix="ft_bench_ckpt_")
+    try:
+        plan = FaultPlan.parse(f"kill:step={KILL_STEP},lose=1")
+        res = _run(fault_plan=plan, ckpt_dir=ckpt_dir,
+                   ckpt_every=CKPT_EVERY)
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    rescales = res.events_of("rescale")
+    if len(rescales) != 1:
+        raise AssertionError(f"expected 1 rescale event, got {res.events}")
+    ev = rescales[0]
+    if ev.steps_lost > CKPT_EVERY:
+        raise AssertionError(
+            f"lost {ev.steps_lost} steps to a device kill with checkpoints "
+            f"every {CKPT_EVERY} — restore picked a stale checkpoint")
+    _parity("kill", res.final_loss, base.final_loss)
+    print(f"kill: {ev.detail['devices']} devices at step {ev.step}, "
+          f"resumed from step {ev.detail['restored_step']} "
+          f"({ev.steps_lost} steps lost) in {ev.recovery_s * 1e3:.0f} ms, "
+          f"new cuts {ev.detail['boundaries']}, "
+          f"final loss {res.final_loss:.4f}")
+    rows.append((
+        "ft_kill_rescale", ev.recovery_s * 1e6,
+        f"devices={ev.detail['devices']};steps_lost={ev.steps_lost};"
+        f"cuts={'/'.join(map(str, ev.detail['boundaries']))};"
+        f"final_loss={res.final_loss:.4f}"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, der in rows:
+        us_s = f"{us:.1f}" if isinstance(us, float) else us
+        print(f"{name},{us_s},{der}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

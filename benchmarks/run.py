@@ -10,9 +10,9 @@ archive the per-PR perf trajectory.
 ``--list`` prints the registry).  CI smoke runs
 ``--only kernel_bench,attn_bench`` and, under 4 fake devices,
 ``--only pipeline_bench``, ``--only serving_bench``,
-``--only quant_bench`` and ``--only spec_bench`` — their rows go to
-``BENCH_serving.json`` / ``BENCH_pipeline.json`` / ``BENCH_quant.json``
-/ ``BENCH_spec.json``.
+``--only quant_bench``, ``--only spec_bench`` and ``--only ft_bench`` —
+their rows go to ``BENCH_serving.json`` / ``BENCH_pipeline.json`` /
+``BENCH_quant.json`` / ``BENCH_spec.json`` / ``BENCH_ft.json``.
 """
 
 from __future__ import annotations
@@ -28,9 +28,11 @@ PIPELINE_JSON = "BENCH_pipeline.json"
 SERVING_JSON = "BENCH_serving.json"
 QUANT_JSON = "BENCH_quant.json"
 SPEC_JSON = "BENCH_spec.json"
+FT_JSON = "BENCH_ft.json"
 #: modules whose rows are archived separately from the kernel JSON
 _SPLIT_JSON = {"pipeline_bench": PIPELINE_JSON, "serving_bench": SERVING_JSON,
-               "quant_bench": QUANT_JSON, "spec_bench": SPEC_JSON}
+               "quant_bench": QUANT_JSON, "spec_bench": SPEC_JSON,
+               "ft_bench": FT_JSON}
 
 
 def _capture(mod_main):
@@ -83,6 +85,7 @@ def main(argv=None) -> None:
         discussion_reconfig,
         fig3_zynq_cluster,
         fig4_ultrascale_cluster,
+        ft_bench,
         kernel_bench,
         pipeline_bench,
         power,
@@ -104,6 +107,7 @@ def main(argv=None) -> None:
         ("serving_bench", serving_bench.main),
         ("quant_bench", quant_bench.main),
         ("spec_bench", spec_bench.main),
+        ("ft_bench", ft_bench.main),
         ("strategy_tpu", strategy_tpu.main),
         ("power", power.main),
     ]

@@ -178,3 +178,31 @@ def rebalance(
     )
     rebalanced.validate(graph)
     return rebalanced
+
+
+def recut_boundaries(cfg, seq_len: int, stages: int, node_rates) -> tuple:
+    """Straggler-driven pipeline re-cut, config -> runtime boundaries.
+
+    The supervisor's replan hook: build the config's per-layer cost
+    graph, re-balance a pipeline plan with :func:`rebalance` (rate-
+    weighted min-max DP — stage *s*'s cost is divided by
+    ``node_rates[s]``, so a half-speed board receives roughly half the
+    MACs), and lower the op-granularity cuts back to the layer
+    boundaries the runtime executes.  Falls back to cutting the layer
+    cost vector directly when the op cuts don't land on layer lines (or
+    for ``attn_every`` hybrids, whose cut unit is the group).
+    """
+    from repro.core.graph import config_graph
+    from repro.core.partition import layer_boundaries_from_plan
+    from repro.core.placement import pipeline_boundaries
+
+    rates = [max(float(node_rates.get(s, 1.0)), 1e-3) for s in range(stages)]
+    if getattr(cfg, "attn_every", 0):
+        return pipeline_boundaries(cfg, seq_len, stages, stage_weights=rates)
+    graph = config_graph(cfg, seq_len)
+    plan = rebalance(graph, make_plan(graph, "pipeline", stages),
+                     dict(enumerate(rates)))
+    bounds = layer_boundaries_from_plan(plan, cfg.num_layers)
+    if bounds is None:  # a stage held only book-end ops
+        return pipeline_boundaries(cfg, seq_len, stages, stage_weights=rates)
+    return bounds

@@ -152,6 +152,33 @@ def pad_pipeline_params(params, cfg, boundaries):
     return out
 
 
+def unpad_pipeline_params(params, cfg, boundaries):
+    """Inverse of :func:`pad_pipeline_params`: recover the canonical
+    ``(num_layers, ...)`` blocks layout from the padded per-stage one.
+
+    Stage *k*'s slice holds its real layers first (rows ``j < depth_k``
+    of ``k * max_depth + j``); the trailing rows are masked copies, so
+    dropping them is exact.  The canonical layout is what checkpoints
+    store (topology-independent restore) and what a live re-cut re-pads
+    from — the unpad -> re-pad pair is how the supervisor moves running
+    state between boundary vectors without touching values.
+    """
+    boundaries = tuple(int(b) for b in boundaries)
+    depths = stage_depths(boundaries)
+    max_d = max(depths)
+    if all(d == max_d for d in depths):
+        return params
+    per = cfg.attn_every or 1
+    rows: list[int] = []
+    for s, d in enumerate(depths):
+        for j in range(d):
+            rows.extend((s * max_d + j) * per + r for r in range(per))
+    gather = np.asarray(rows, np.int32)
+    out = dict(params)
+    out["blocks"] = jax.tree.map(lambda a: a[gather], params["blocks"])
+    return out
+
+
 def _check_padded(blocks, stages: int, max_d: int, per: int) -> None:
     lead = {int(l.shape[0]) for l in jax.tree.leaves(blocks)}
     want = stages * max_d * per

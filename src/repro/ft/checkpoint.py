@@ -48,6 +48,20 @@ def _leaf_name(path) -> str:
     return "__".join(parts) or "root"
 
 
+#: test/fault-injection hook: called as ``hook(leaf_index, leaf_name)``
+#: after each leaf file lands in the .tmp dir.  Raising from it
+#: simulates the process dying mid-write — the torn .tmp stays behind
+#: and the rename into place never happens (exactly the crash the
+#: atomic-rename design defends against).  See ft/faults.py.
+_write_fault = None
+
+
+def set_write_fault(hook) -> None:
+    """Install (or clear, with None) the per-leaf write fault hook."""
+    global _write_fault
+    _write_fault = hook
+
+
 def save(directory: str, state, step: int | None = None) -> str:
     """Synchronous atomic checkpoint save.  Returns the final path."""
     host_state = jax.device_get(state)
@@ -61,7 +75,7 @@ def _write(directory: str, host_state, step) -> str:
     os.makedirs(tmp)
     leaves, _ = _flatten(host_state)
     manifest = {"step": step, "leaves": [], "format": 1, "time": time.time()}
-    for path, leaf in leaves:
+    for i, (path, leaf) in enumerate(leaves):
         name = _leaf_name(path)
         arr = np.asarray(leaf)
         logical = str(arr.dtype)
@@ -70,6 +84,8 @@ def _write(directory: str, host_state, step) -> str:
             # pattern and record the logical dtype in the manifest
             arr = arr.view(np.uint16)
         np.save(os.path.join(tmp, name + ".npy"), arr, allow_pickle=False)
+        if _write_fault is not None:
+            _write_fault(i, name)
         manifest["leaves"].append(
             {"name": name, "shape": list(arr.shape), "dtype": logical}
         )
@@ -109,18 +125,48 @@ def restore(directory: str, like, shardings=None):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def _step_dirs(root: str) -> dict[int, str]:
+    """Complete ``step_N`` checkpoint dirs under ``root`` as {N: name}.
+
+    Only integer suffixes count: a torn ``step_12.tmp`` left by a crash
+    (which can contain a manifest if the crash hit between the manifest
+    write and the rename) must never parse as ``int("12.tmp")``, and
+    stray files/dirs are ignored rather than crashing the scan.
+    """
+    out: dict[int, str] = {}
+    if not os.path.isdir(root):
+        return out
+    for d in os.listdir(root):
+        if not d.startswith("step_"):
+            continue
+        suffix = d.split("_", 1)[1]
+        if not suffix.isdigit():
+            continue
+        if os.path.isfile(os.path.join(root, d, "manifest.json")):
+            out[int(suffix)] = d
+    return out
+
+
+def sweep_tmp(root: str) -> list[str]:
+    """Remove orphaned ``*.tmp`` dirs (torn writes from a crashed saver);
+    returns the names removed.  Safe to call any time — a live writer
+    never shares a root with another writer by construction (one
+    AsyncCheckpointer per job)."""
+    removed = []
+    if not os.path.isdir(root):
+        return removed
+    for d in os.listdir(root):
+        p = os.path.join(root, d)
+        if d.endswith(".tmp") and os.path.isdir(p):
+            shutil.rmtree(p, ignore_errors=True)
+            removed.append(d)
+    return removed
+
+
 def latest_step(root: str) -> int | None:
     """Scan ``root`` for step_N checkpoint dirs; return max N or None."""
-    if not os.path.isdir(root):
-        return None
-    best = None
-    for d in os.listdir(root):
-        if d.startswith("step_") and os.path.isfile(
-            os.path.join(root, d, "manifest.json")
-        ):
-            n = int(d.split("_", 1)[1])
-            best = n if best is None else max(best, n)
-    return best
+    steps = _step_dirs(root)
+    return max(steps) if steps else None
 
 
 class AsyncCheckpointer:
@@ -135,32 +181,41 @@ class AsyncCheckpointer:
         self.root = root
         self.keep = keep
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
         os.makedirs(root, exist_ok=True)
+        # a previous incarnation may have died mid-write: torn .tmp dirs
+        # are garbage (the rename never happened), reclaim the disk
+        self.swept = sweep_tmp(root)
 
     def save(self, state, step: int) -> None:
         host_state = jax.device_get(state)  # synchronous snapshot
-        self.wait()  # at most one write in flight
+        self.wait()  # at most one write in flight; raises a prior failure
 
         def work():
-            _write(os.path.join(self.root, f"step_{step}"), host_state, step)
-            self._rotate()
+            try:
+                _write(os.path.join(self.root, f"step_{step}"), host_state,
+                       step)
+                self._rotate()
+            except BaseException as e:  # surfaced on the next save()/wait()
+                self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
+        """Join the in-flight write.  A background-thread failure is
+        re-raised HERE (and from the next ``save``, which waits first) —
+        a failed write must not masquerade as a successful save while
+        rotation silently stops."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _rotate(self) -> None:
-        steps = sorted(
-            int(d.split("_", 1)[1])
-            for d in os.listdir(self.root)
-            if d.startswith("step_")
-            and os.path.isfile(os.path.join(self.root, d, "manifest.json"))
-        )
-        for s in steps[: -self.keep]:
+        for s in sorted(_step_dirs(self.root))[: -self.keep]:
             shutil.rmtree(os.path.join(self.root, f"step_{s}"), ignore_errors=True)
 
     def restore_latest(self, like, shardings=None):

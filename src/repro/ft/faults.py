@@ -1,0 +1,191 @@
+"""Deterministic fault injection for the fault-tolerant training loop.
+
+A :class:`FaultPlan` is a seeded list of :class:`FaultEvent`s that the
+:class:`repro.ft.supervisor.TrainSupervisor` consults every step, so a
+recovery run is exactly reproducible — the point of the harness is to
+*prove* the detect -> replan -> reshard -> resume loop, and a proof you
+can't replay is not a proof.  Four fault kinds cover the taxonomy the
+paper's reconfigurable cluster must survive:
+
+``slowdown``    a pipeline stage runs ``factor``x slower starting at
+                ``step`` (optionally for ``duration`` steps).  The
+                supervisor scales the slow stage's recorded service
+                time AND sleeps the extra wall-clock the lockstep pipe
+                would lose, so both the StragglerMonitor input and the
+                measured step time are faithful to a slow board.
+``kill``        at ``step``, ``lose`` devices vanish from the visible
+                device set before the step runs — the supervisor must
+                reform the mesh from the survivors and restore the
+                latest checkpoint re-sharded onto it.
+``ckpt_crash``  the next async checkpoint write at/after ``step`` dies
+                partway through its leaf files (via the
+                ``ft.checkpoint.set_write_fault`` hook), leaving a torn
+                ``.tmp`` dir — atomic rename means the previous
+                checkpoint must survive intact.
+``nan``         the batch at data index ``step`` is poisoned: its loss
+                comes out non-finite.  The supervisor must roll back to
+                the last checkpoint and skip that batch on replay.
+
+``kill`` and ``ckpt_crash`` are one-shot (consumed when they fire);
+``slowdown`` is a state over a step interval; ``nan`` is a property of
+a *data index* (so the replay after rollback sees it again unless the
+batch is skipped — which is exactly what the supervisor must do).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+
+from repro.ft import checkpoint as _ckpt
+
+__all__ = [
+    "CheckpointWriteCrash",
+    "FaultEvent",
+    "FaultPlan",
+    "one_shot_write_fault",
+]
+
+
+class CheckpointWriteCrash(RuntimeError):
+    """Injected mid-write crash (stands in for the process dying)."""
+
+
+def one_shot_write_fault(after_leaves: int = 1):
+    """Install a ``ft.checkpoint`` write fault that raises
+    :class:`CheckpointWriteCrash` after ``after_leaves`` leaf files have
+    been written, then uninstalls itself (the next write succeeds, like
+    a restarted saver would)."""
+
+    def hook(i, name):
+        if i + 1 >= after_leaves:
+            _ckpt.set_write_fault(None)
+            raise CheckpointWriteCrash(
+                f"injected crash after leaf {i} ({name!r})"
+            )
+
+    _ckpt.set_write_fault(hook)
+    return hook
+
+
+_KINDS = ("slowdown", "kill", "ckpt_crash", "nan")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    kind: str
+    step: int  # first step active (data index for ``nan``)
+    stage: int = 0  # slowdown: which pipeline stage / node
+    factor: float = 1.0  # slowdown: service-time multiplier
+    duration: int | None = None  # slowdown: steps active (None = forever)
+    lose: int = 1  # kill: devices removed
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(one of {_KINDS})")
+        if self.step < 0:
+            raise ValueError(f"fault step must be >= 0, got {self.step}")
+        if self.kind == "slowdown" and self.factor < 1.0:
+            raise ValueError(f"slowdown factor must be >= 1, got "
+                             f"{self.factor}")
+        if self.kind == "kill" and self.lose < 1:
+            raise ValueError(f"kill must lose >= 1 devices, got {self.lose}")
+
+    def spec(self) -> str:
+        parts = [f"step={self.step}"]
+        if self.kind == "slowdown":
+            parts += [f"stage={self.stage}", f"factor={self.factor:g}"]
+            if self.duration is not None:
+                parts.append(f"duration={self.duration}")
+        if self.kind == "kill":
+            parts.append(f"lose={self.lose}")
+        return f"{self.kind}:" + ",".join(parts)
+
+
+class FaultPlan:
+    """Seeded schedule of fault events queried by the supervisor."""
+
+    def __init__(self, events=(), seed: int = 0):
+        self.events = tuple(events)
+        self.seed = seed
+        self._rng = random.Random(seed)
+        self._fired: set[int] = set()  # indices of consumed one-shots
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def parse(cls, spec: str, seed: int = 0) -> "FaultPlan":
+        """Parse the ``--fault-plan`` CLI syntax: ``;``-separated events,
+        each ``kind:key=val,key=val`` — e.g.
+        ``slowdown:step=6,stage=2,factor=3;kill:step=20,lose=1;nan:step=9``.
+        """
+        events = []
+        for item in spec.split(";"):
+            item = item.strip()
+            if not item:
+                continue
+            kind, _, rest = item.partition(":")
+            kw: dict = {}
+            for pair in filter(None, (p.strip() for p in rest.split(","))):
+                k, _, v = pair.partition("=")
+                if not _ or k not in ("step", "stage", "factor", "duration",
+                                      "lose"):
+                    raise ValueError(f"bad fault field {pair!r} in {item!r}")
+                kw[k] = float(v) if k == "factor" else int(v)
+            events.append(FaultEvent(kind=kind.strip(), **kw))
+        return cls(events, seed=seed)
+
+    def spec(self) -> str:
+        return ";".join(ev.spec() for ev in self.events)
+
+    # -- queries (called by the supervisor) ---------------------------------
+
+    def slowdowns_at(self, step: int) -> dict[int, float]:
+        """Active per-stage slowdown factors at ``step`` (empty = clean).
+        Overlapping slowdowns on one stage compound multiplicatively."""
+        out: dict[int, float] = {}
+        for ev in self.events:
+            if ev.kind != "slowdown" or step < ev.step:
+                continue
+            if ev.duration is not None and step >= ev.step + ev.duration:
+                continue
+            out[ev.stage] = out.get(ev.stage, 1.0) * ev.factor
+        return out
+
+    def nan_at(self, data_index: int) -> bool:
+        """Is the batch at ``data_index`` poisoned?  NOT one-shot: the
+        same batch replayed after a rollback is just as poisoned, which
+        is why the supervisor must skip it."""
+        return any(
+            ev.kind == "nan" and ev.step == data_index for ev in self.events
+        )
+
+    def take_kill(self, step: int) -> FaultEvent | None:
+        """Consume a pending device-loss event due at/before ``step``."""
+        return self._take("kill", step)
+
+    def take_ckpt_crash(self, step: int) -> FaultEvent | None:
+        """Consume a pending checkpoint-crash event due at/before
+        ``step``; the caller installs :func:`one_shot_write_fault` so the
+        NEXT checkpoint write dies partway (at a seeded leaf index, see
+        :meth:`crash_leaf_index`)."""
+        return self._take("ckpt_crash", step)
+
+    def _take(self, kind: str, step: int) -> FaultEvent | None:
+        for i, ev in enumerate(self.events):
+            if i not in self._fired and ev.kind == kind and ev.step <= step:
+                self._fired.add(i)
+                return ev
+        return None
+
+    def crash_leaf_index(self, num_leaves: int) -> int:
+        """Seeded choice of how many leaf files a ckpt_crash lets land
+        before dying — deterministic per plan, varies with the seed so
+        repeated runs probe different torn-write shapes."""
+        return self._rng.randrange(1, max(num_leaves, 2))
+
+    def reset(self) -> None:
+        """Re-arm all one-shot events (fresh run of the same plan)."""
+        self._fired.clear()
+        self._rng = random.Random(self.seed)

@@ -34,24 +34,49 @@ class StragglerReport:
     stragglers: list[int]
 
 
-class StragglerMonitor:
-    """Sliding-window per-node step-duration tracker."""
+def _median(values) -> float:
+    """True median: mean of the two middle elements for even counts (the
+    upper-middle shortcut biases the baseline toward the slow half of a
+    small cluster, masking real stragglers and flagging healthy nodes)."""
+    s = sorted(values)
+    n = len(s)
+    mid = n // 2
+    return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
 
-    def __init__(self, window: int = 16, threshold: float = 1.3):
+
+class StragglerMonitor:
+    """Sliding-window per-node step-duration tracker.
+
+    ``min_samples`` gates both the per-node mean and the verdict: a node
+    is only compared against the cluster median once it has that many
+    recorded steps, so a single hiccup (GC pause, page fault) can never
+    trigger a cluster reconfiguration.
+    """
+
+    def __init__(self, window: int = 16, threshold: float = 1.3,
+                 min_samples: int = 4):
         self.window = window
         self.threshold = threshold
+        self.min_samples = max(2, min(min_samples, window))
         self._hist: dict[int, deque] = defaultdict(lambda: deque(maxlen=window))
 
     def record(self, node: int, duration_s: float) -> None:
         self._hist[node].append(duration_s)
 
+    def reset(self) -> None:
+        """Drop all history — call after a reconfiguration, when old
+        per-node timings no longer describe the new plan."""
+        self._hist.clear()
+
     def report(self) -> StragglerReport:
         means = {
-            n: sum(h) / len(h) for n, h in self._hist.items() if len(h) >= 2
+            n: sum(h) / len(h)
+            for n, h in self._hist.items()
+            if len(h) >= self.min_samples
         }
         if not means:
             return StragglerReport(rates={}, stragglers=[])
-        med = sorted(means.values())[len(means) // 2]
+        med = _median(means.values())
         rates = {n: med / m for n, m in means.items()}  # slow node -> <1
         stragglers = [
             n for n, m in means.items() if m > self.threshold * med

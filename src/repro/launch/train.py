@@ -50,11 +50,45 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20,
+                    help="checkpoint period in steps (supervised mode)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under the fault-tolerant TrainSupervisor "
+                         "(straggler re-cut, elastic restore, NaN rollback)")
+    ap.add_argument("--fault-plan", default="",
+                    help="injected faults, e.g. "
+                         "'slowdown:step=6,stage=2,factor=3;kill:step=20'")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.scaled_down()
+
+    if args.supervise or args.fault_plan:
+        from repro.ft.faults import FaultPlan
+        from repro.ft.supervisor import TrainSupervisor
+
+        plan = (FaultPlan.parse(args.fault_plan)
+                if args.fault_plan else None)
+        sup = TrainSupervisor(
+            cfg,
+            AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps),
+            steps=args.steps, seq=args.seq, batch=args.batch,
+            strategy=args.strategy, schedule=args.pipeline_schedule,
+            microbatches=args.microbatches, grad_accum=args.grad_accum,
+            ckpt_dir=args.ckpt or None, ckpt_every=args.ckpt_every,
+            fault_plan=plan, verbose=True,
+        )
+        res = sup.run()
+        print(f"final loss {res.final_loss:.4f}  "
+              f"mean step {1e3 * sum(res.step_times) / len(res.step_times):.1f}ms  "
+              f"events {len(res.events)}")
+        for ev in res.events:
+            print(f"  [{ev.kind}] at step {ev.step}: lost {ev.steps_lost} "
+                  f"steps, recovered in {ev.recovery_s * 1e3:.0f}ms  "
+                  f"{ev.detail}")
+        print("done")
+        return
     mesh = (
         make_production_mesh()
         if args.production_mesh

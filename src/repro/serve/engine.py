@@ -200,6 +200,17 @@ class ServingEngine:
 
     def submit(self, prompt, max_new: int) -> Request:
         prompt = np.asarray(prompt, np.int32)
+        # malformed input is a caller bug, not a capacity rejection:
+        # raise before touching counters or the queue
+        if prompt.ndim != 1:
+            raise ValueError(
+                f"prompt must be a 1-D token sequence, got shape "
+                f"{prompt.shape}")
+        if prompt.size == 0:
+            raise ValueError("prompt must be non-empty (an empty prompt "
+                             "has no token to condition decode on)")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
         need = kv_cache.pages_for(len(prompt) + max_new, self.page_size)
         # gate on the POOL too: with an undersubscribed pool a request
         # that can never be admitted would block the FIFO queue forever

@@ -111,6 +111,47 @@ def init_pipeline_state(key, cfg, boundaries, dtype=jnp.bfloat16,
             "step": jnp.zeros((), jnp.int32)}
 
 
+def unpad_pipeline_state(state, cfg, boundaries):
+    """Strip pipeline padding from a live train state: params AND the
+    optimizer moments (images of the params) return to the canonical
+    ``(num_layers, ...)`` blocks layout.  This is the layout checkpoints
+    store, so a restore can re-pad for ANY later boundary vector or
+    stage count (elastic restart after a device loss)."""
+    from repro.dist.pipeline import unpad_pipeline_params
+
+    def un(tree):
+        return unpad_pipeline_params(tree, cfg, boundaries)
+
+    opt = state["opt"]
+    return dict(state, params=un(state["params"]),
+                opt=opt._replace(mu=un(opt.mu), nu=un(opt.nu)))
+
+
+def pad_pipeline_state(state, cfg, boundaries):
+    """Pad a canonical train state (params + optimizer moments) into the
+    pipeline's per-stage layout for ``boundaries`` — the restore-side
+    twin of :func:`unpad_pipeline_state`."""
+    from repro.dist.pipeline import pad_pipeline_params
+
+    def pad(tree):
+        return pad_pipeline_params(tree, cfg, boundaries)
+
+    opt = state["opt"]
+    return dict(state, params=pad(state["params"]),
+                opt=opt._replace(mu=pad(opt.mu), nu=pad(opt.nu)))
+
+
+def repad_pipeline_state(state, cfg, old_boundaries, new_boundaries):
+    """Move a LIVE pipeline train state between boundary vectors: unpad
+    the old stage layout back to canonical layer order, re-pad for the
+    new cuts.  Pure gathers — parameter and moment values are untouched,
+    so training continues mid-run as if the new cuts had been used all
+    along (the straggler-driven re-cut path)."""
+    return pad_pipeline_state(
+        unpad_pipeline_state(state, cfg, old_boundaries), cfg, new_boundaries
+    )
+
+
 def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, *, grad_accum: int = 1,
                     aux_weight: float = 0.01, remat: bool = True,
                     compress=None):

@@ -211,3 +211,329 @@ class TestData:
             np.testing.assert_array_equal(b1["tokens"], src.batch(1)["tokens"])
         finally:
             pf.close()
+
+
+# ---------------------------------------------------------------------------
+# PR 7: fault injection, crash-safe checkpointing, supervisor recovery
+# ---------------------------------------------------------------------------
+
+import math
+import subprocess
+import sys
+
+from repro.core.placement import pipeline_boundaries
+from repro.core.scheduler import recut_boundaries
+from repro.ft.faults import (
+    CheckpointWriteCrash,
+    FaultEvent,
+    FaultPlan,
+    one_shot_write_fault,
+)
+from repro.ft.supervisor import TrainSupervisor
+from repro.train.step import (
+    pad_pipeline_state,
+    repad_pipeline_state,
+    unpad_pipeline_state,
+)
+
+
+class TestCheckpointRobustness:
+    def test_latest_step_skips_noninteger_and_incomplete(self, tmp_path):
+        """A torn ``step_12.tmp`` (which CAN hold a manifest if the crash
+        hit between manifest write and rename) must not parse as step 12,
+        and a dir without a manifest is not a checkpoint."""
+        root = tmp_path / "r"
+        for name, manifest in [("step_5", True), ("step_12.tmp", True),
+                               ("step_abc", True), ("step_9", False)]:
+            d = root / name
+            d.mkdir(parents=True)
+            if manifest:
+                (d / "manifest.json").write_text("{}")
+        (root / "step_junkfile").write_text("")  # stray FILE, not a dir
+        assert ckpt.latest_step(str(root)) == 5
+
+    def test_startup_sweeps_orphaned_tmp(self, tmp_path):
+        root = tmp_path / "r"
+        (root / "step_3.tmp").mkdir(parents=True)
+        (root / "step_2").mkdir()
+        (root / "step_2" / "manifest.json").write_text("{}")
+        ac = ckpt.AsyncCheckpointer(str(root))
+        assert ac.swept == ["step_3.tmp"]
+        assert not (root / "step_3.tmp").exists()
+        assert ckpt.latest_step(str(root)) == 2
+
+    def test_background_error_surfaces_on_next_save(self, tmp_path,
+                                                    small_state):
+        """A failed async write must NOT masquerade as a successful save:
+        the background exception re-raises from the next save()/wait(),
+        and the checkpointer keeps working afterwards."""
+        _, state = small_state
+        root = str(tmp_path / "r")
+        ac = ckpt.AsyncCheckpointer(root)
+        ac.save(state, 1)
+        ac.wait()
+        one_shot_write_fault(1)
+        ac.save(state, 2)  # background thread dies mid-write
+        with pytest.raises(CheckpointWriteCrash):
+            ac.save(state, 3)
+        ac.save(state, 3)  # error was consumed; still functional
+        ac.wait()
+        assert ckpt.latest_step(root) == 3
+
+    def test_crash_mid_save_previous_intact(self, tmp_path, small_state):
+        """Atomicity under a mid-write crash: the previous checkpoint
+        restores bit-identically, the torn .tmp never becomes latest and
+        is swept."""
+        _, state = small_state
+        root = str(tmp_path / "r")
+        ac = ckpt.AsyncCheckpointer(root)
+        ac.save(state, 1)
+        ac.wait()
+        one_shot_write_fault(3)  # die after the 3rd leaf file
+        ac.save(state, 2)
+        with pytest.raises(CheckpointWriteCrash):
+            ac.wait()
+        assert ckpt.latest_step(root) == 1
+        assert os.path.isdir(os.path.join(root, "step_2.tmp"))
+        back = ckpt.restore(os.path.join(root, "step_1"), state)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert ckpt.sweep_tmp(root) == ["step_2.tmp"]
+        assert ckpt.latest_step(root) == 1
+
+
+class TestStragglerMedian:
+    def test_true_median_even_node_count(self):
+        """Two slow nodes of four: the upper-middle shortcut median (a
+        slow node's own time) would flag nothing; the true median splits
+        the halves and flags both."""
+        mon = StragglerMonitor(window=4, threshold=1.3, min_samples=4)
+        for _ in range(4):
+            for node in range(4):
+                mon.record(node, 0.1 * (3.0 if node >= 2 else 1.0))
+        assert mon.report().stragglers == [2, 3]
+
+    def test_min_samples_gates_verdict(self):
+        mon = StragglerMonitor(window=8, threshold=1.3, min_samples=4)
+        for _ in range(8):
+            for node in range(3):
+                mon.record(node, 0.1)
+        mon.record(3, 1.0)  # single hiccup (GC pause)
+        rep = mon.report()
+        assert 3 not in rep.rates
+        assert rep.stragglers == []
+        for _ in range(3):
+            mon.record(3, 1.0)  # now persistent
+        assert mon.report().stragglers == [3]
+
+    def test_reset_clears_history(self):
+        mon = StragglerMonitor(window=4, min_samples=2)
+        for _ in range(4):
+            mon.record(0, 0.1)
+            mon.record(1, 0.9)
+        assert mon.report().stragglers == [1]
+        mon.reset()
+        assert mon.report().stragglers == []
+
+
+class TestFaultPlan:
+    def test_parse_spec_roundtrip(self):
+        spec = ("slowdown:step=6,stage=2,factor=3;"
+                "kill:step=20,lose=1;nan:step=9;ckpt_crash:step=4")
+        plan = FaultPlan.parse(spec)
+        assert [e.kind for e in plan.events] == [
+            "slowdown", "kill", "nan", "ckpt_crash"]
+        assert FaultPlan.parse(plan.spec()).spec() == plan.spec()
+
+    def test_parse_rejects_bad_input(self):
+        with pytest.raises(ValueError):
+            FaultPlan.parse("meteor:step=3")
+        with pytest.raises(ValueError):
+            FaultPlan.parse("slowdown:step=3,bogus=1")
+        with pytest.raises(ValueError):
+            FaultEvent("slowdown", step=3, factor=0.5)  # speedup?
+        with pytest.raises(ValueError):
+            FaultEvent("kill", step=3, lose=0)
+
+    def test_slowdown_window_and_compounding(self):
+        plan = FaultPlan.parse(
+            "slowdown:step=4,stage=1,factor=2,duration=3;"
+            "slowdown:step=5,stage=1,factor=3")
+        assert plan.slowdowns_at(3) == {}
+        assert plan.slowdowns_at(4) == {1: 2.0}
+        assert plan.slowdowns_at(5) == {1: 6.0}  # overlap compounds
+        assert plan.slowdowns_at(7) == {1: 3.0}  # first expired
+
+    def test_kill_is_one_shot_nan_is_not(self):
+        plan = FaultPlan.parse("kill:step=5;nan:step=3")
+        assert plan.take_kill(4) is None
+        ev = plan.take_kill(7)  # due at/before 7
+        assert ev is not None and ev.step == 5
+        assert plan.take_kill(7) is None  # consumed
+        assert plan.nan_at(3) and plan.nan_at(3)  # replay is still poisoned
+        assert not plan.nan_at(4)
+        plan.reset()
+        assert plan.take_kill(5) is not None  # re-armed
+
+    def test_crash_leaf_index_seeded(self):
+        a, b = FaultPlan(seed=7), FaultPlan(seed=7)
+        idx = [a.crash_leaf_index(30) for _ in range(5)]
+        assert idx == [b.crash_leaf_index(30) for _ in range(5)]
+        assert all(1 <= i < 30 for i in idx)
+
+
+class TestRepadAndRecut:
+    def test_unpad_pad_roundtrip_and_live_repad(self):
+        """pad -> unpad is the identity on canonical state, and a live
+        re-pad equals padding the canonical state for the new cuts —
+        params AND optimizer moments."""
+        cfg = get_config("qwen3_0p6b").scaled_down(num_layers=5)
+        state = init_state(KEY, cfg, jnp.float32)
+        old, new = (0, 2, 3, 5), (0, 1, 3, 5)
+        padded = pad_pipeline_state(state, cfg, old)
+        back = unpad_pipeline_state(padded, cfg, old)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        moved = repad_pipeline_state(padded, cfg, old, new)
+        want = pad_pipeline_state(state, cfg, new)
+        for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(moved)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_recut_shrinks_slow_stage(self):
+        cfg = get_config("qwen3_0p6b").scaled_down(num_layers=8)
+        even = pipeline_boundaries(cfg, 32, 4)
+        b = recut_boundaries(cfg, 32, 4, {2: 1 / 3.0})  # stage 2 at 1/3x
+        assert b[0] == 0 and b[-1] == cfg.num_layers
+        assert all(b[i] < b[i + 1] for i in range(4))
+        assert b[3] - b[2] < even[3] - even[2]
+
+    def test_recut_always_valid_cuts(self):
+        """Any rate vector must yield a strictly-increasing 0..L cut
+        vector the runtime can execute (the op-level DP may move cuts
+        even at uniform rates — book-end ops skew stage costs — so only
+        validity is contractual here; the supervisor treats an unchanged
+        vector as a noop anyway)."""
+        cfg = get_config("qwen3_0p6b").scaled_down(num_layers=8)
+        for rates in ({}, {0: 0.5}, {1: 1 / 3.0, 3: 0.9},
+                      {s: 1.0 for s in range(4)}):
+            b = recut_boundaries(cfg, 32, 4, rates)
+            assert b[0] == 0 and b[-1] == cfg.num_layers
+            assert all(b[i] < b[i + 1] for i in range(4))
+
+
+class TestSupervisorFused:
+    def test_nan_rollback_and_ckpt_crash_retry(self, tmp_path):
+        """Single-device end-to-end: a poisoned batch rolls back to the
+        last checkpoint and is skipped on replay; a checkpoint write that
+        crashes mid-save is swept and retried without losing a step."""
+        cfg = get_config("qwen3_0p6b").scaled_down(
+            num_layers=2, d_model=64, vocab=256)
+        plan = FaultPlan.parse("nan:step=3;ckpt_crash:step=4")
+        sup = TrainSupervisor(
+            cfg, steps=8, seq=16, batch=4, strategy="fused",
+            fault_plan=plan, ckpt_dir=str(tmp_path / "ck"), ckpt_every=2,
+        )
+        res = sup.run()
+        assert all(math.isfinite(l) for l in res.losses)
+        rb, = res.events_of("rollback")
+        assert rb.detail["skipped_data_index"] == 3
+        assert rb.steps_lost <= 2  # bounded by the checkpoint period
+        retry, = res.events_of("ckpt_retry")
+        assert "CheckpointWriteCrash" in retry.detail["error"]
+        # the retried save landed: no torn tmp, a real latest checkpoint
+        assert ckpt.sweep_tmp(str(tmp_path / "ck")) == []
+        assert ckpt.latest_step(str(tmp_path / "ck")) == 8
+
+    def test_persistent_nan_raises(self, tmp_path):
+        """Every batch poisoned: the supervisor must refuse to loop
+        forever re-rolling-back."""
+        cfg = get_config("qwen3_0p6b").scaled_down(
+            num_layers=2, d_model=64, vocab=256)
+        plan = FaultPlan([FaultEvent("nan", step=s) for s in range(20)])
+        sup = TrainSupervisor(
+            cfg, steps=4, seq=16, batch=4, strategy="fused",
+            fault_plan=plan, ckpt_dir=str(tmp_path / "ck"), ckpt_every=2,
+            max_rollbacks=3,
+        )
+        with pytest.raises(RuntimeError, match="rollback"):
+            sup.run()
+
+
+def _run_supervisor_subprocess(code: str, marker: str, timeout: int = 560):
+    """4-fake-CPU-device supervisor check in a subprocess (the device
+    count override must not leak into this process)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={"PYTHONPATH": os.path.join(repo, "src"),
+             "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+             "HOME": os.environ.get("HOME", "/tmp"),
+             "JAX_PLATFORMS": "cpu"},
+        cwd=repo, timeout=timeout,
+    )
+    assert marker in r.stdout, r.stdout + r.stderr
+
+
+class TestSupervisorPipeline:
+    def test_straggler_recut_with_loss_parity(self):
+        """4-stage pipeline, stage 2 turns 3x slow: the supervisor must
+        re-cut to give the slow stage fewer layers, keep training, and
+        land on the fault-free final loss (the re-pad is a pure gather —
+        the math is unchanged)."""
+        _run_supervisor_subprocess("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import math
+from repro.configs.base import get_config
+from repro.ft.faults import FaultPlan
+from repro.ft.supervisor import TrainSupervisor
+
+cfg = get_config("qwen3_0p6b").scaled_down(num_layers=8, d_model=64,
+                                           vocab=256)
+
+def run(plan):
+    return TrainSupervisor(cfg, steps=12, seq=16, batch=4,
+                           strategy="pipeline", fault_plan=plan,
+                           seed=0).run()
+
+base = run(None)
+res = run(FaultPlan.parse("slowdown:step=3,stage=2,factor=3"))
+recuts = res.events_of("recut")
+assert recuts, f"no recut: {res.events}"
+old, new = recuts[0].detail["old"], recuts[0].detail["new"]
+assert new != old
+assert new[3] - new[2] < old[3] - old[2], (old, new)  # stage 2 shrank
+assert all(math.isfinite(l) for l in res.losses)
+assert abs(res.final_loss - base.final_loss) <= 5e-2 * abs(base.final_loss), (
+    res.final_loss, base.final_loss)
+print("RECUT_PARITY_OK")
+""", "RECUT_PARITY_OK")
+
+    def test_device_loss_rescale_resume(self):
+        """A device dies mid-run: reform the mesh 4 -> 3 stages, restore
+        the latest checkpoint re-sharded, lose at most ckpt_every steps,
+        finish training."""
+        _run_supervisor_subprocess("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import math, tempfile
+from repro.configs.base import get_config
+from repro.ft.faults import FaultPlan
+from repro.ft.supervisor import TrainSupervisor
+
+cfg = get_config("qwen3_0p6b").scaled_down(num_layers=8, d_model=64,
+                                           vocab=256)
+with tempfile.TemporaryDirectory() as d:
+    sup = TrainSupervisor(cfg, steps=10, seq=16, batch=4,
+                          strategy="pipeline",
+                          fault_plan=FaultPlan.parse("kill:step=7,lose=1"),
+                          ckpt_dir=d, ckpt_every=2, seed=0)
+    res = sup.run()
+ev, = res.events_of("rescale")
+assert ev.detail["devices"] == "4->3", ev
+assert ev.detail["stages"] == 3
+assert ev.steps_lost <= 2, ev
+assert len(res.boundaries_history[-1]) == 4  # 3 stages -> 4 cut points
+assert all(math.isfinite(l) for l in res.losses)
+print("RESCALE_OK")
+""", "RESCALE_OK")

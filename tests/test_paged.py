@@ -368,6 +368,28 @@ class TestEngine:
         with pytest.raises(ValueError):
             eng.submit(np.zeros((20,), np.int32), 8)  # needs 4 of 2 pages
 
+    def test_malformed_request_rejected_before_mutation(self):
+        """Empty / non-1-D prompts and max_new < 1 are caller bugs: clear
+        ValueError, and NO counter or queue mutation (a half-admitted
+        request would wedge the FIFO)."""
+        cfg, params = self._cfg_params()
+        eng = ServingEngine(params, cfg, max_slots=1, max_len=32,
+                            page_size=8, prefill_chunk=8)
+        with pytest.raises(ValueError, match="non-empty"):
+            eng.submit(np.zeros((0,), np.int32), 4)
+        with pytest.raises(ValueError, match="1-D"):
+            eng.submit(np.zeros((2, 3), np.int32), 4)
+        with pytest.raises(ValueError, match="max_new"):
+            eng.submit(np.array([5, 7], np.int32), 0)
+        with pytest.raises(ValueError, match="max_new"):
+            eng.submit(np.array([5, 7], np.int32), -3)
+        assert eng.pending == 0
+        assert eng._rejected == 0  # malformed != capacity-rejected
+        assert eng._next_rid == 0
+        # and the engine still works after the rejects
+        req = eng.submit(np.array([5, 7], np.int32), 2)
+        assert req.rid == 0 and eng.pending == 1
+
     def test_prompt_lengths_share_one_prefill_compile(self):
         """Sub-chunk prompts bucket to one padded shape with the real
         length traced — admission must not recompile per length."""
