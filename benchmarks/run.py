@@ -6,18 +6,22 @@ writes the same rows machine-readably to ``BENCH_kernels.json``
 (``pipeline_bench`` rows go to ``BENCH_pipeline.json``) so CI can
 archive the per-PR perf trajectory.
 
-``--only mod1,mod2`` restricts to a subset (unknown names fail fast;
-``--list`` prints the registry).  CI smoke runs
+``--only mod1,mod2`` restricts to a subset — entries are fnmatch GLOBS
+(``--only 'serving*'`` selects serving_bench; ``--only '*_bench'`` the
+whole bench family), and a pattern matching nothing fails fast.
+``--list`` prints the registry.  CI smoke runs
 ``--only kernel_bench,attn_bench`` and, under 4 fake devices,
 ``--only pipeline_bench``, ``--only serving_bench``,
-``--only quant_bench``, ``--only spec_bench`` and ``--only ft_bench`` —
-their rows go to ``BENCH_serving.json`` / ``BENCH_pipeline.json`` /
-``BENCH_quant.json`` / ``BENCH_spec.json`` / ``BENCH_ft.json``.
+``--only quant_bench``, ``--only spec_bench``, ``--only ft_bench`` and
+``--only slo_bench`` — their rows go to ``BENCH_serving.json`` /
+``BENCH_pipeline.json`` / ``BENCH_quant.json`` / ``BENCH_spec.json`` /
+``BENCH_ft.json`` / ``BENCH_slo.json``.
 """
 
 from __future__ import annotations
 
 import argparse
+import fnmatch
 import io
 import json
 import sys
@@ -29,10 +33,11 @@ SERVING_JSON = "BENCH_serving.json"
 QUANT_JSON = "BENCH_quant.json"
 SPEC_JSON = "BENCH_spec.json"
 FT_JSON = "BENCH_ft.json"
+SLO_JSON = "BENCH_slo.json"
 #: modules whose rows are archived separately from the kernel JSON
 _SPLIT_JSON = {"pipeline_bench": PIPELINE_JSON, "serving_bench": SERVING_JSON,
                "quant_bench": QUANT_JSON, "spec_bench": SPEC_JSON,
-               "ft_bench": FT_JSON}
+               "ft_bench": FT_JSON, "slo_bench": SLO_JSON}
 
 
 def _capture(mod_main):
@@ -91,6 +96,7 @@ def main(argv=None) -> None:
         power,
         quant_bench,
         serving_bench,
+        slo_bench,
         spec_bench,
         strategy_tpu,
     )
@@ -105,6 +111,7 @@ def main(argv=None) -> None:
         ("attn_bench", attn_bench.main),
         ("pipeline_bench", pipeline_bench.main),
         ("serving_bench", serving_bench.main),
+        ("slo_bench", slo_bench.main),
         ("quant_bench", quant_bench.main),
         ("spec_bench", spec_bench.main),
         ("ft_bench", ft_bench.main),
@@ -126,13 +133,17 @@ def main(argv=None) -> None:
         return
 
     if args.only:
-        wanted = {m.strip() for m in args.only.split(",") if m.strip()}
-        unknown = wanted - {name for name, _ in modules}
-        if unknown:
+        patterns = [m.strip() for m in args.only.split(",") if m.strip()]
+        names = [name for name, _ in modules]
+        # each entry is an fnmatch glob; a pattern selecting NOTHING is
+        # a typo, not an empty run — fail before anything executes
+        dead = [p for p in patterns
+                if not any(fnmatch.fnmatch(n, p) for n in names)]
+        if dead:
             raise SystemExit(
-                f"unknown benchmark modules: {sorted(unknown)} "
-                f"(see --list)")
-        modules = [(name, fn) for name, fn in modules if name in wanted]
+                f"benchmark patterns match nothing: {dead} (see --list)")
+        modules = [(name, fn) for name, fn in modules
+                   if any(fnmatch.fnmatch(name, p) for p in patterns)]
 
     failed = []
     for name, fn in modules:

@@ -42,7 +42,7 @@ from repro.kernels.decode_attention import (
 )
 from repro.models import transformer as tf
 from repro.serve import kv_cache
-from repro.serve.engine import ServingEngine, latency_stats
+from repro.serve.engine import ServingEngine, latency_stats, phase_breakdown
 from repro.serve.step import generate, make_prefill_step, make_serve_step
 
 SLOTS = 4
@@ -222,6 +222,26 @@ def main(argv=None):
     results.append(("serving_token_p99", stats["token_p99_s"] * 1e6,
                     f"tok_s={ct_tps:.0f};"
                     f"req_mean_ms={stats['request_mean_s']*1e3:.1f}"))
+    # tail SHAPE rows: p99/p50 dispersion and where the p99 request's
+    # latency actually went (queue vs prefill vs decode share) — the
+    # admission-stall engine shows up here as a prefill/queue-dominated
+    # tail long before it moves the mean
+    ratio = stats["token_p99_s"] / max(stats["token_p50_s"], 1e-12)
+    print(f"tail      : p99/p50 = {ratio:.1f}x; queue wait "
+          f"p50 {stats['queue_p50_s']*1e3:.2f} ms, "
+          f"p99 {stats['queue_p99_s']*1e3:.2f} ms")
+    results.append(("serving_p99_over_p50", ratio,
+                    f"p50_us={stats['token_p50_s']*1e6:.1f};"
+                    f"p99_us={stats['token_p99_s']*1e6:.1f};"
+                    f"queue_p99_ms={stats['queue_p99_s']*1e3:.2f}"))
+    pb = phase_breakdown(done)
+    print(f"p99 request breakdown: queue {pb['p99_queue']:.0%}, "
+          f"prefill {pb['p99_prefill']:.0%}, decode {pb['p99_decode']:.0%}")
+    results.append((
+        "serving_p99_breakdown", 0.0,
+        f"queue={pb['p99_queue']:.3f};prefill={pb['p99_prefill']:.3f};"
+        f"decode={pb['p99_decode']:.3f};mean_queue={pb['mean_queue']:.3f};"
+        f"mean_decode={pb['mean_decode']:.3f}"))
 
     speedup = ct_tps / st_tps
     print(f"speedup   : {speedup:.2f}x token throughput "

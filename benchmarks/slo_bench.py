@@ -1,0 +1,280 @@
+"""SLO-aware scheduling benchmark: interleaved prefill vs admission stall.
+
+The admission-stall engine (``prefill_budget=None``, the pre-PR-8
+discipline) runs each admitted prompt's ENTIRE prefill before the next
+decode step — on a trace that mixes short chats with long-context
+prompts, every decoding slot's inter-token gap spikes by the full long
+prefill whenever one arrives.  The interleaved engine spends at most
+one budget of prefill per step, so the same trace decodes with bounded
+gaps.  Four cells, all gated:
+
+* **interleave (f32)** — the headline: p99 token latency of the stall
+  engine vs the budgeted engine on a mixed-length Poisson trace.
+  Gates: >= 3x p99 improvement, equal token throughput within 10%, and
+  BITWISE greedy-token parity per request (the budget is pure
+  scheduling — both engines chunk every prompt identically, so even
+  f32 accumulation orders match).
+* **prefix** — the same parity under the radix prefix cache, with the
+  shared-prefix hit length pinned deterministic (page-aligned base
+  warmed by a completed request; every sharer diverges at its first
+  suffix token, so both engines look up the same ``m``).
+* **int8** — the same parity on quantized pools (identical per-request
+  op sequences -> identical requant decisions).
+* **preempt** — one slot, a low-priority request mid-decode, a
+  high-priority long-prompt arrival: the high-priority request's
+  inter-token p99 must meet the configured SLO (it preempts instead of
+  queuing), and the preempted request must still finish with exactly
+  its unpreempted greedy tokens (its KV survived in the prefix tree).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import transformer as tf
+from repro.serve.engine import ServingEngine, latency_stats
+from repro.serve.step import generate
+
+from benchmarks.serving_bench import MODEL_KW
+
+SLOTS = 4
+PAGE = 16
+MAX_LEN = 512
+CHUNK = 32           # prefill chunk size (one compile shape per bucket)
+BUDGET = 2 * CHUNK   # per-step prefill spend for the interleaved engine:
+                     # two chunks bounds the decode gap at ~2 chunk costs
+                     # while halving the occupancy loss of parked slots
+SHORT_PROMPT = 32
+LONG_PROMPT = 384    # 12 chunks: the head-of-line stall the gate measures
+NEW_MIX = [4, 8, 4, 40]
+N_REQUESTS = 24
+LONG_EVERY = 6       # every 6th request carries the long prompt
+ARRIVAL_MEAN_S = 0.002
+
+
+def _trace(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    t, reqs = 0.0, []
+    for i in range(N_REQUESTS):
+        t += rng.exponential(ARRIVAL_MEAN_S)
+        n = LONG_PROMPT if (i % LONG_EVERY == LONG_EVERY - 1) else SHORT_PROMPT
+        prompt = rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+        reqs.append((t, prompt, NEW_MIX[i % len(NEW_MIX)]))
+    return reqs
+
+
+def _pass(eng, reqs):
+    """Replay the trace (arrivals honored); returns (done, dt)."""
+    t0 = time.perf_counter()
+    submitted = 0
+    while True:
+        now = time.perf_counter() - t0
+        while submitted < len(reqs) and reqs[submitted][0] <= now:
+            eng.submit(reqs[submitted][1], reqs[submitted][2])
+            submitted += 1
+        if submitted == len(reqs) and eng.pending == 0 and eng.active == 0:
+            break
+        eng.step()
+    done = eng.run()
+    return done, time.perf_counter() - t0
+
+
+def _run_cell(params, cfg, reqs, repeats=1, **engine_kw):
+    """Build an engine, one untimed warm pass (compiles every prefill
+    bucket the trace touches), then ``repeats`` timed passes — each on a
+    fresh engine with a leak check — returning the fastest (best-of-N
+    damps scheduler noise on shared CI hosts)."""
+    def build():
+        return ServingEngine(params, cfg, max_slots=SLOTS, max_len=MAX_LEN,
+                             page_size=PAGE, prefill_chunk=CHUNK,
+                             **engine_kw)
+    warm = build()
+    _pass(warm, reqs)
+    best = None
+    for _ in range(repeats):
+        eng = build()
+        free0 = eng.allocator.num_free
+        done, dt = _pass(eng, reqs)
+        if eng.prefix is not None:
+            eng.prefix.clear()
+        assert eng.allocator.num_free == free0, "page leak"
+        if best is None or dt < best[1]:
+            best = (done, dt, eng)
+    return best
+
+
+def _assert_parity(stall_done, inter_done, label):
+    a = {r.rid: list(r.tokens) for r in stall_done}
+    b = {r.rid: list(r.tokens) for r in inter_done}
+    assert a == b, f"{label}: greedy tokens diverged between engines"
+
+
+def _interleave_cell(params, cfg, reqs, results, seed):
+    """Headline cell: stall vs budgeted engine, p99 + throughput gates."""
+    st_done, st_dt, st_eng = _run_cell(params, cfg, reqs, repeats=2)
+    in_done, in_dt, in_eng = _run_cell(params, cfg, reqs, repeats=2,
+                                       prefill_budget=BUDGET)
+    _assert_parity(st_done, in_done, "interleave")
+    st, it = latency_stats(st_done), latency_stats(in_done)
+    st_tps, in_tps = st["tokens"] / st_dt, it["tokens"] / in_dt
+    # the SLO metric is INTER-token p99: the gap an in-flight decoder
+    # sees, which a 12-chunk admission-time prefill inflates directly
+    # (queue wait is backlog, the same for both disciplines — it lives
+    # in token_p99/ttft, reported but not gated here)
+    gain = st["itl_p99_s"] / it["itl_p99_s"]
+    tps_drift = abs(1.0 - in_tps / st_tps)
+    print(f"stall      : itl p50 {st['itl_p50_s']*1e3:.2f} ms, "
+          f"p99 {st['itl_p99_s']*1e3:.1f} ms, {st_tps:.0f} tok/s")
+    print(f"interleaved: itl p50 {it['itl_p50_s']*1e3:.2f} ms, "
+          f"p99 {it['itl_p99_s']*1e3:.1f} ms, {in_tps:.0f} tok/s "
+          f"({in_eng.stats()['prefill_chunk_calls']} chunk calls)")
+    print(f"p99 gain   : {gain:.1f}x at {tps_drift:.1%} throughput drift")
+    assert gain >= 3.0, (
+        f"budgeted prefill must cut inter-token p99 >= 3x on the "
+        f"long-prompt trace, got {gain:.2f}x")
+    assert tps_drift <= 0.10, (
+        f"interleaving must hold throughput within 10%, "
+        f"drifted {tps_drift:.1%}")
+    results.append(("slo_stall_itl_p99", st["itl_p99_s"] * 1e6,
+                    f"itl_p50_us={st['itl_p50_s']*1e6:.1f};"
+                    f"tok_s={st_tps:.0f};seed={seed}"))
+    results.append(("slo_interleaved_itl_p99", it["itl_p99_s"] * 1e6,
+                    f"itl_p50_us={it['itl_p50_s']*1e6:.1f};"
+                    f"tok_s={in_tps:.0f};budget={BUDGET}"))
+    results.append(("slo_itl_p99_gain", gain,
+                    f"tps_drift={tps_drift:.3f};gate=3.0x"))
+    return in_eng
+
+
+def _prefix_cell(params, cfg, base, results, seed):
+    """Parity under prefix sharing: the hit length must be identical in
+    both engines, so the tree is warmed by a COMPLETED request (prompts
+    index at prefill completion) and every sharer diverges right after
+    the page-aligned base."""
+    rng = np.random.default_rng(seed + 1)
+    sharers = []
+    for i in range(8):
+        suffix = rng.integers(0, cfg.vocab, (CHUNK,)).astype(np.int32)
+        suffix[0] = i  # distinct first suffix token: hit stops at base
+        sharers.append((0.0, np.concatenate([base, suffix]),
+                        NEW_MIX[i % len(NEW_MIX)]))
+
+    def run(budget):
+        eng = ServingEngine(params, cfg, max_slots=SLOTS, max_len=MAX_LEN,
+                            page_size=PAGE, prefill_chunk=CHUNK,
+                            prefix_cache=True, prefill_budget=budget)
+        eng.submit(base, 1)
+        eng.run()  # warm: base now fully indexed (page-aligned)
+        done, _ = _pass(eng, sharers)
+        return done, eng
+
+    st_done, st_eng = run(None)
+    in_done, in_eng = run(CHUNK)
+    _assert_parity(st_done, in_done, "prefix")
+    for eng in (st_eng, in_eng):
+        hits = eng.stats()["prefix_hit_tokens"]
+        assert hits >= 8 * len(base), (
+            f"every sharer must hit the {len(base)}-token base, "
+            f"got {hits} hit tokens")
+    print(f"prefix     : parity ok, {in_eng.stats()['prefix_hit_tokens']} "
+          f"hit tokens over 8 sharers (base {len(base)})")
+    results.append(("slo_prefix_parity", 0.0,
+                    f"hit_tokens={in_eng.stats()['prefix_hit_tokens']};"
+                    f"sharers=8;base={len(base)}"))
+
+
+def _int8_cell(params, cfg, reqs, results):
+    st_done, _, _ = _run_cell(params, cfg, reqs, kv_dtype="int8")
+    in_done, _, in_eng = _run_cell(params, cfg, reqs, kv_dtype="int8",
+                                   prefill_budget=BUDGET)
+    _assert_parity(st_done, in_done, "int8")
+    print(f"int8       : parity ok over {len(in_done)} requests "
+          f"({in_eng.stats()['prefill_chunk_calls']} chunk calls)")
+    results.append(("slo_int8_parity", 0.0, f"requests={len(in_done)}"))
+
+
+def _preempt_cell(params, cfg, results, seed, slo_ms):
+    """One slot: low-priority A mid-decode, high-priority B arrives.
+    B must preempt (not queue behind A's remaining decode), its
+    inter-token p99 must meet the SLO, and A must still finish with
+    its exact unpreempted greedy tokens."""
+    rng = np.random.default_rng(seed + 2)
+    pa = rng.integers(0, cfg.vocab, (64,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab, (256,)).astype(np.int32)
+    a_new, b_new = 40, 8
+
+    def run():
+        eng = ServingEngine(params, cfg, max_slots=1, max_len=MAX_LEN,
+                            page_size=PAGE, num_pages=24,
+                            prefill_chunk=CHUNK, prefill_budget=BUDGET,
+                            prefix_cache=True, slo_ms=slo_ms)
+        ra = eng.submit(pa, a_new, priority=0)
+        for _ in range(10):
+            eng.step()  # A mid-decode
+        rb = eng.submit(pb, b_new, priority=1)
+        eng.run()
+        return ra, rb, eng
+
+    run()  # warm pass: compile every bucket this cell touches
+    ra, rb, eng = run()
+    assert ra.preemptions == 1, ra.preemptions
+    gaps = sorted(b - a for a, b in zip(rb.token_times, rb.token_times[1:]))
+    p99 = gaps[min(len(gaps) - 1, int(0.99 * len(gaps)))]
+    print(f"preempt    : B inter-token p99 {p99*1e3:.2f} ms vs SLO "
+          f"{slo_ms:.2f} ms; A preempted {ra.preemptions}x, "
+          f"{eng.stats()['preempt_pages_saved']} pages saved")
+    assert p99 * 1e3 <= slo_ms, (
+        f"high-priority p99 {p99*1e3:.2f} ms blew the {slo_ms:.2f} ms SLO")
+    for r, p, m in ((ra, pa, a_new), (rb, pb, b_new)):
+        want = np.asarray(generate(params, cfg, jnp.asarray(p)[None],
+                                   max_new=m, max_len=MAX_LEN,
+                                   dtype=jnp.float32))[0]
+        assert np.array_equal(np.array(r.tokens), want), (
+            "preemption changed the greedy tokens")
+    results.append(("slo_preempt_p99", p99 * 1e6,
+                    f"slo_ms={slo_ms:.2f};preemptions={ra.preemptions};"
+                    f"pages_saved={eng.stats()['preempt_pages_saved']}"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="benchmarks.slo_bench")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace RNG seed (prompts + arrival gaps); "
+                         "recorded in the emitted rows")
+    args = ap.parse_args([] if argv is None else argv)
+
+    cfg = get_config("qwen3_0p6b").scaled_down(**MODEL_KW)
+    params = tf.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    reqs = _trace(cfg, seed=args.seed)
+    results = [("slo_trace", 0.0,
+                f"seed={args.seed};requests={N_REQUESTS};"
+                f"long_prompt={LONG_PROMPT};budget={BUDGET}")]
+
+    in_eng = _interleave_cell(params, cfg, reqs, results, args.seed)
+
+    rng = np.random.default_rng(args.seed)
+    base = rng.integers(0, cfg.vocab, (4 * PAGE,)).astype(np.int32)
+    _prefix_cell(params, cfg, base, results, args.seed)
+    _int8_cell(params, cfg, reqs[:12], results)
+
+    # the preemption SLO comes from the interleave cell's MEASURED costs
+    # on this host: generous room for a decode step plus the jitter of
+    # one prefill chunk, but far below a stall (12 chunks back-to-back)
+    es = in_eng.stats()
+    slo_ms = 4.0 * es["decode_cost_ms"] + 2.0 * es["chunk_cost_ms"]
+    _preempt_cell(params, cfg, results, args.seed, slo_ms)
+
+    print("\nname,us_per_call,derived")
+    for name, us, der in results:
+        print(f"{name},{us:.1f},{der}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

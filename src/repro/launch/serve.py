@@ -47,7 +47,10 @@ def _run_paged_engine(params, cfg, args):
         num_pages=2 * pages if args.prefix_cache else pages,
         prefill_chunk=max(16, args.prompt // 4),
         prefix_cache=args.prefix_cache,
-        draft_params=draft_params, draft_cfg=draft_cfg, spec_k=args.spec_k)
+        draft_params=draft_params, draft_cfg=draft_cfg, spec_k=args.spec_k,
+        prefill_budget=args.prefill_budget, slo_ms=args.slo_ms)
+    priorities = ([int(p) for p in args.priority.split(",")]
+                  if args.priority else [0])
     rng = jax.random.PRNGKey(1)
     # mixed-length trace: prompts at the configured length, generation
     # lengths spread 1/4x..1x so slots actually churn; with the prefix
@@ -60,7 +63,8 @@ def _run_paged_engine(params, cfg, args):
         if args.prefix_cache and i % 2:
             prompt = jnp.concatenate([shared, prompt[args.prompt // 2:]])
         new = max(1, args.new_tokens // (1 + i % 4))
-        eng.submit(jnp.asarray(prompt), new)
+        eng.submit(jnp.asarray(prompt), new,
+                   priority=priorities[i % len(priorities)])
     t0 = time.time()
     done = eng.run()
     dt = time.time() - t0
@@ -72,12 +76,24 @@ def _run_paged_engine(params, cfg, args):
           f"p99 {stats['token_p99_s']*1e3:.1f} ms; "
           f"ttft p50 {stats['ttft_p50_s']*1e3:.1f} ms, "
           f"p99 {stats['ttft_p99_s']*1e3:.1f} ms; "
+          f"queue wait p99 {stats['queue_p99_s']*1e3:.1f} ms; "
           f"pool {eng.num_pages} pages x {args.page_size} slots "
           f"({eng.kv_dtype}, {eng.pool_bytes/2**10:.0f} KiB)")
     es = eng.stats()
     print(f"  admitted {es['admitted']}, rejected {es['rejected']}; "
           f"prefilled {es['prefilled_tokens']}/{es['prompt_tokens']} "
           "prompt tokens")
+    if eng.prefill_budget is not None:
+        print(f"  scheduler: budget {es['prefill_budget']} tok/step over "
+              f"{es['prefill_chunk_calls']} chunk calls; "
+              f"{es['preemptions']} preemptions "
+              f"({es['preempt_pages_saved']} pages saved to prefix)")
+    if eng.slo_s is not None:
+        print(f"  slo {es['slo_ms']:.1f} ms: deferred "
+              f"{es['slo_deferred_steps']} admissions, throttled "
+              f"{es['slo_throttled_steps']} steps "
+              f"(chunk {es.get('chunk_cost_ms', 0):.2f} ms, decode "
+              f"{es.get('decode_cost_ms', 0):.2f} ms EWMA)")
     if args.prefix_cache:
         print(f"  prefix cache: {es['prefix_hits']}/{es['prefix_lookups']} "
               f"hits, {es['prefix_hit_tokens']} tokens served from shared "
@@ -115,6 +131,20 @@ def main(argv=None):
                          "target's)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="speculative tokens proposed per slot per step")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="paged engine: max prompt tokens prefilled per "
+                         "engine step (decode-interleaved chunked "
+                         "prefill); default runs each prefill to "
+                         "completion inside admission")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="paged engine: per-token decode latency target — "
+                         "throttles per-step prefill and defers admission "
+                         "when in-flight decoders would miss it (needs "
+                         "--prefill-budget)")
+    ap.add_argument("--priority", default=None,
+                    help="comma-separated priority classes cycled over "
+                         "the trace (e.g. '0,1'); higher preempts lower "
+                         "under pool pressure")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)

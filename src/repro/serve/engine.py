@@ -1,26 +1,69 @@
-"""Continuous-batching serving engine over the paged KV cache.
+"""SLO-aware continuous-batching serving engine over the paged KV cache.
 
 The static loop (launch/serve.py --engine static) admits one batch,
 decodes until the LONGEST request finishes, and only then admits the
 next — short requests ride along as dead slots, so token throughput
 collapses to ``mean(len) / max(len)`` of the batch.  This engine keeps a
 fixed grid of **decode slots** and schedules at REQUEST granularity,
-the way the paper schedules heterogeneous models onto one cluster:
+the way the paper schedules heterogeneous models onto one cluster.
+
+Slot state machine::
+
+    FREE --admit--> PREFILLING --last chunk--> DECODING --done--> FREE
+                        |  ^                       |
+                        |  '----- re-admit --------'
+                        '------- preempt ----------'   (request re-queues)
 
 * a request is **admitted** the moment a slot is free AND the page
-  allocator can cover its worst case (prompt + max_new tokens — no
-  mid-flight preemption to reason about);
-* admission runs the request's **chunked prefill** on a batch-1 dense
-  cache (the ragged-prefill path, so arbitrary prompt lengths jit at
-  one chunk shape) and scatters the rows into its pages
-  (``kv_cache.write_prompt_pages``) — prefill interleaves between
-  decode steps rather than stalling a monolithic batch;
-* every engine step runs ONE jitted paged decode over all slots —
-  per-sequence block tables and lens mean mixed fill levels batch
-  together, inactive slots mask to zeros;
+  allocator can cover its worst case (prompt + max_new tokens);
+* admitted requests **prefill chunk-by-chunk** against a per-slot
+  batch-1 dense cache (the ragged-prefill path, so arbitrary prompt
+  lengths jit at one chunk shape).  With ``prefill_budget=None`` the
+  whole prefill runs inside admission (the pre-PR-8 discipline: every
+  decoding slot stalls for the full prompt).  With a budget, each
+  ``step()`` spends at most ``prefill_budget`` prompt tokens advancing
+  PREFILLING slots round-robin and then runs the batched decode — a
+  long prompt never blocks decode for more than one budget's worth of
+  work, which is what bounds p99 token latency (benchmarks/slo_bench);
+* the prefilled rows scatter into the request's pages
+  (``kv_cache.write_prompt_pages``) only when the LAST chunk lands, so
+  a mid-prefill slot looks exactly like an empty one to the decode
+  kernel (block-table row -1, len 0);
+* every engine step runs ONE jitted paged decode over the DECODING
+  slots — per-sequence block tables and lens mean mixed fill levels
+  batch together, masked slots produce zeros;
 * finished sequences **retire** at the end of the step that completed
   them: pages go back to the free list and the slot is immediately
   re-admittable.
+
+**Priorities and preemption.**  ``submit(..., priority=)`` tags a
+request; admission orders the queue by *effective* priority
+``priority + wait / aging_s`` (aging: a starved low-priority request
+eventually outranks fresh high-priority arrivals), FIFO within a tie.
+Under slot or pool pressure a strictly-lower-priority running sequence
+is **preempted**: its computed KV rows are released INTO the radix
+prefix cache (the tree keeps one reference, so the work survives as an
+evictable-but-resident prefix), its pages return to the pool, and the
+request re-queues with its generated tokens attached — re-admission
+looks the sequence up in the tree and prefills only the suffix
+generated since (one token, when nothing was evicted meanwhile).
+Without a prefix cache preemption still works; the KV is simply
+recomputed at re-admission.  Either way the greedy tokens are the
+request's own deterministic function of its token sequence, so a
+preempted request finishes with exactly the tokens of an unpreempted
+run (tests/test_slo.py).
+
+**p99-targeted admission** (``slo_ms``, needs ``prefill_budget``): the
+engine EWMA-measures the per-chunk prefill cost and the batched decode
+step cost.  An in-flight decoder's per-token latency is one step time
+= (prefill tokens spent that step)/chunk x chunk_cost + decode_cost,
+so each step's prefill allowance shrinks to
+``chunk * floor((slo - decode_cost) / chunk_cost)`` tokens — the most
+prefill that still lands the step under the SLO — and admission DEFERS
+entirely while even one chunk would blow it (allowance zero).  A
+patience guard (``slo_patience_s``) forces one chunk per step once the
+oldest waiting request has aged past it, so an over-tight SLO degrades
+to slow prefill instead of starvation.
 
 The engine is the host-side half of the contract: it owns block tables,
 lens and the free list (request-rate work); the device half is the
@@ -43,15 +86,46 @@ from repro.serve.step import (
     make_verify_step,
 )
 
+# jitted steps are shared ACROSS engine instances: benchmarks and tests
+# routinely build one engine to warm the compile caches and a second
+# (same cfg) to measure — per-instance jax.jit wrappers would silently
+# recompile every shape inside the measured pass.  Keyed by the cfg
+# OBJECT (retained in the value, so its id can't be recycled) + chunk;
+# the page-copy / prefix-seed / COW-fork helpers are cfg-independent
+# and shared globally.
+_JIT_CACHE: dict = {}
+
+
+def _family_jits(cfg, chunk: int):
+    key = (id(cfg), chunk)
+    hit = _JIT_CACHE.get(key)
+    if hit is not None and hit[0] is cfg:
+        return hit[1:]
+    fns = (
+        jax.jit(make_prefill_step(cfg, chunk=chunk), donate_argnums=(2,)),
+        jax.jit(make_serve_step(cfg), donate_argnums=(2,)),
+        jax.jit(make_verify_step(cfg), donate_argnums=(2,)),
+    )
+    _JIT_CACHE[key] = (cfg,) + fns
+    return fns
+
+
+_COPY_JIT = jax.jit(kv_cache.write_prompt_pages, donate_argnums=(0,))
+_SEED_JIT = jax.jit(kv_cache.seed_prefix_dense, donate_argnums=(0,))
+_FORK_JIT = jax.jit(kv_cache.fork_page, donate_argnums=(0,))
+
 
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray  # (prompt_len,) int32
     max_new: int
+    priority: int = 0
     t_submit: float = 0.0
+    t_admit: float | None = None  # FIRST admission (queue-wait metric)
     t_first: float | None = None
     t_done: float | None = None
+    preemptions: int = 0
     tokens: list = dataclasses.field(default_factory=list)
     token_times: list = dataclasses.field(default_factory=list)
 
@@ -59,12 +133,34 @@ class Request:
     def done(self) -> bool:
         return len(self.tokens) >= self.max_new
 
+    @property
+    def seq(self) -> np.ndarray:
+        """Full known token sequence: prompt + generated so far — what a
+        re-admission after preemption must (re)prefill or resume."""
+        if not self.tokens:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.tokens, np.int32)])
+
 
 @dataclasses.dataclass
 class _Slot:
     req: Request | None = None
     pages: list = dataclasses.field(default_factory=list)
     length: int = 0  # tokens in cache (prompt + generated-so-far - 1)
+    # -- PREFILLING state (dense is the in-flight batch-1 prefill cache)
+    seq: np.ndarray | None = None  # admission-time token sequence
+    dense: dict | None = None
+    pf_pos: int = 0    # rows of ``seq`` already in the dense cache
+    n_prefix: int = 0  # rows served from shared prefix pages
+
+    @property
+    def prefilling(self) -> bool:
+        return self.dense is not None
+
+    @property
+    def decoding(self) -> bool:
+        return self.req is not None and self.dense is None
 
 
 class ServingEngine:
@@ -82,14 +178,32 @@ class ServingEngine:
     bf16).  Prefill still runs in ``dtype``; pages quantize at scatter
     time.
 
+    ``prefill_budget`` (tokens per step) turns on decode-interleaved
+    chunked prefill: pending prefills advance at most that many prompt
+    tokens per ``step()`` (round-robin, always at least one chunk when
+    any budget remains) instead of running to completion inside
+    admission — see the module docstring for the latency math.  Needs
+    the dynamic prefill path (not SWA).  ``slo_ms`` adds p99-targeted
+    admission on top (needs ``prefill_budget``): per-step allowance
+    throttling from measured chunk/decode costs, with
+    ``slo_patience_s`` (default ``50 * slo``) bounding how long an
+    over-tight SLO may defer anyone.  ``aging_s`` is the queue-aging
+    constant (seconds of waiting worth one priority class; ``None``
+    disables aging — pure priority order, low priority can starve).
+
     ``prefix_cache=True`` turns on prefix sharing: admitted prompts are
     indexed in a radix tree over page-granular token chunks, and a new
     request whose prompt shares a cached prefix pins those pages
     (refcount++), seeds a dense cache from them, and prefills ONLY the
     unseen suffix — a partially-filled shared tail page is COW-forked
-    before the sequence writes into it.  Retirement re-inserts prompt +
-    generated tokens and releases the slot's references; under pool
-    pressure admission evicts unpinned LRU tree pages.
+    before the sequence writes into it.  Retirement (and preemption)
+    re-inserts prompt + generated tokens and releases the slot's
+    references; under pool pressure admission evicts unpinned LRU tree
+    pages.  Note: prompts index at prefill COMPLETION (only then are
+    the rows physically in the pages), so with a ``prefill_budget`` two
+    same-wave admissions cannot share each other's in-flight prefix;
+    without a budget the admission loop completes each prefill before
+    the next lookup and same-wave sharing works as before.
 
     ``draft_params``/``draft_cfg`` + ``spec_k`` turn on speculative
     decoding: the draft (same vocab, its own fully-backed paged cache
@@ -99,7 +213,8 @@ class ServingEngine:
     target's own next token is emitted — greedy output is exactly the
     non-speculative sequence, rejected rows need no physical rollback
     (they sit at/after the advanced length, masked and later
-    overwritten).
+    overwritten).  PREFILLING slots sit out of speculative rounds the
+    same way they sit out of plain decode.
     """
 
     def __init__(self, params, cfg, *, max_slots: int = 4,
@@ -109,7 +224,11 @@ class ServingEngine:
                  kv_dtype: str | None = None,
                  pool_bytes: int | None = None,
                  prefix_cache: bool = False,
-                 draft_params=None, draft_cfg=None, spec_k: int = 4):
+                 draft_params=None, draft_cfg=None, spec_k: int = 4,
+                 prefill_budget: int | None = None,
+                 slo_ms: float | None = None,
+                 slo_patience_s: float | None = None,
+                 aging_s: float | None = 5.0):
         if not kv_cache.supports_paged(cfg):
             raise NotImplementedError(
                 f"ServingEngine: {cfg.name} ({cfg.family}) has recurrent/"
@@ -144,10 +263,31 @@ class ServingEngine:
         self._prefill_chunk = prefill_chunk
         # SWA rolling buffers can't absorb pad rows -> exact-shape path
         self._dyn_prefill = not cfg.sliding_window
-        self._prefill = jax.jit(make_prefill_step(cfg, chunk=prefill_chunk),
-                                donate_argnums=(2,))
-        self._decode = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
-        self._copy = jax.jit(kv_cache.write_prompt_pages, donate_argnums=(0,))
+        self._prefill, self._decode, self._verify = _family_jits(
+            cfg, prefill_chunk)
+        self._copy = _COPY_JIT
+        # -- SLO-aware scheduling knobs
+        if prefill_budget is not None:
+            if prefill_budget < 1:
+                raise ValueError(
+                    f"prefill_budget must be >= 1 token, got {prefill_budget}")
+            if not self._dyn_prefill:
+                raise NotImplementedError(
+                    "prefill_budget needs the dynamic (resumable) prefill "
+                    "path — an SWA rolling buffer cannot pause mid-prompt")
+        if slo_ms is not None and prefill_budget is None:
+            raise ValueError(
+                "slo_ms targets per-step prefill interference — it needs "
+                "prefill_budget (bounded per-step prefill) to act on")
+        self.prefill_budget = prefill_budget
+        self.slo_s = slo_ms / 1e3 if slo_ms is not None else None
+        self.slo_patience_s = (
+            slo_patience_s if slo_patience_s is not None
+            else (50.0 * self.slo_s if self.slo_s else None))
+        self.aging_s = aging_s
+        self._chunk_ewma: float | None = None   # s per prefill chunk call
+        self._decode_ewma: float | None = None  # s per batched decode step
+        self._chunk_probe = 0  # steps since the last synced chunk sample
         if prefix_cache and not self._dyn_prefill:
             raise NotImplementedError(
                 "prefix cache needs the dynamic (resumable) prefill path — "
@@ -156,8 +296,8 @@ class ServingEngine:
             kv_cache.RadixPrefixCache(self.allocator, page_size,
                                       full_pages_only=self.kv_dtype == "int8")
             if prefix_cache else None)
-        self._seed = jax.jit(kv_cache.seed_prefix_dense, donate_argnums=(0,))
-        self._fork = jax.jit(kv_cache.fork_page, donate_argnums=(0,))
+        self._seed = _SEED_JIT
+        self._fork = _FORK_JIT
         # speculative decoding: a small same-vocab draft proposes spec_k
         # tokens; the target verifies all of them in one multi-token step
         self.spec_k = int(spec_k) if draft_params is not None else 0
@@ -183,22 +323,22 @@ class ServingEngine:
             self._draft_bt = np.arange(
                 max_slots * self.max_pp, dtype=np.int32
             ).reshape(max_slots, self.max_pp)
-            self._draft_prefill = jax.jit(
-                make_prefill_step(draft_cfg, chunk=prefill_chunk),
-                donate_argnums=(2,))
-            self._draft_decode = jax.jit(make_serve_step(draft_cfg),
-                                         donate_argnums=(2,))
-            self._verify = jax.jit(make_verify_step(cfg), donate_argnums=(2,))
-            self._draft_copy = jax.jit(kv_cache.write_prompt_pages,
-                                       donate_argnums=(0,))
+            self._draft_prefill, self._draft_decode, _ = _family_jits(
+                draft_cfg, prefill_chunk)
+            self._draft_copy = _COPY_JIT
         self.steps = 0
         self._admitted = self._rejected = 0
         self._prompt_tokens = self._prefilled_tokens = 0
         self._spec_steps = self._spec_slot_steps = self._spec_emitted = 0
+        self._preempted = 0
+        self._preempt_pages_saved = 0
+        self._prefill_chunk_calls = 0
+        self._deferred_steps = 0
+        self._throttled_steps = 0
 
     # -- submission ---------------------------------------------------------
 
-    def submit(self, prompt, max_new: int) -> Request:
+    def submit(self, prompt, max_new: int, priority: int = 0) -> Request:
         prompt = np.asarray(prompt, np.int32)
         # malformed input is a caller bug, not a capacity rejection:
         # raise before touching counters or the queue
@@ -221,7 +361,7 @@ class ServingEngine:
                 f"prompt+max_new ({len(prompt)}+{max_new}) exceeds "
                 f"max_len {self.max_len} / pool of {self.num_pages} "
                 f"pages x {self.page_size}")
-        req = Request(self._next_rid, prompt, max_new,
+        req = Request(self._next_rid, prompt, max_new, priority=priority,
                       t_submit=time.perf_counter())
         self._next_rid += 1
         self._queue.append(req)
@@ -241,34 +381,162 @@ class ServingEngine:
         # +spec_k: a verify step writes up to spec_k rows past the last
         # accepted position; the extra headroom keeps those speculative
         # writes on owned pages (past-capacity writes drop in-kernel,
-        # which only costs re-derivation after a truncation)
+        # which only costs re-derivation after a truncation).  A
+        # re-admitted request needs the same worst case: generated
+        # tokens moved from max_new into the resume prompt, the total
+        # row count is unchanged.
         want = len(req.prompt) + req.max_new + self.spec_k
         return min(kv_cache.pages_for(want, self.page_size), self.max_pp)
 
-    def _admit(self) -> None:
-        """FIFO admission: fill free slots while the head-of-queue's
-        worst case fits in the free list (no skipping — later, shorter
-        requests never starve an earlier long one)."""
-        for slot_id, slot in enumerate(self.slots):
-            if not self._queue or slot.req is not None:
-                continue
+    def _eff_priority(self, req: Request, now: float) -> float:
+        """Aging: one ``aging_s`` of queue wait is worth one priority
+        class, so a starved request eventually outranks anything."""
+        if self.aging_s is None:
+            return float(req.priority)
+        return req.priority + (now - req.t_submit) / self.aging_s
+
+    def _bucket(self, n: int) -> int:
+        c = self._prefill_chunk
+        return max(c, -(-n // c) * c)
+
+    # -- SLO throttle -------------------------------------------------------
+
+    def _note_cost(self, attr: str, value: float) -> None:
+        old = getattr(self, attr)
+        setattr(self, attr, value if old is None else 0.7 * old + 0.3 * value)
+
+    def _oldest_wait(self, now: float) -> float:
+        """Longest anyone (queued or mid-prefill) has been waiting."""
+        ts = [r.t_submit for r in self._queue]
+        ts += [s.req.t_submit for s in self.slots if s.prefilling]
+        return now - min(ts) if ts else 0.0
+
+    def _prefill_allowance(self, now: float) -> int | None:
+        """Prompt tokens this step may spend on prefill.  ``None`` means
+        unlimited (no budget configured: admission-stall discipline).
+        With an SLO, the allowance shrinks to what fits the step under
+        the target next to the measured decode cost; the patience guard
+        floors it at one chunk once someone has waited too long."""
+        if self.prefill_budget is None:
+            return None
+        b = self.prefill_budget
+        if (self.slo_s is not None
+                and any(s.decoding for s in self.slots)
+                and self._chunk_ewma and self._decode_ewma):
+            room = self.slo_s - self._decode_ewma
+            chunks = max(0, int(room / self._chunk_ewma))
+            allowed = chunks * self._prefill_chunk
+            if allowed < b:
+                self._throttled_steps += 1
+            b = min(b, allowed)
+            if b == 0 and (self.slo_patience_s is None
+                           or self._oldest_wait(now) > self.slo_patience_s):
+                b = self._prefill_chunk  # starvation floor: one chunk
+        return b
+
+    # -- admission ----------------------------------------------------------
+
+    def _free_slot(self) -> int | None:
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                return i
+        return None
+
+    def _pick_victim(self, req: Request, now: float) -> int | None:
+        """Preemption victim: a running request of STRICTLY lower raw
+        priority — least priority first, least generated progress as
+        the tiebreak (minimum lost/preserved work).  The victim must
+        ALSO rank below the incoming request's EFFECTIVE priority:
+        aging protects a long-waiting runner from being re-preempted by
+        every fresh high-priority arrival (without the guard a steady
+        high-priority stream would evict an aged request each time it
+        re-admits — starvation by preemption, the failure the aging
+        test pins down)."""
+        eff = self._eff_priority(req, now)
+        cands = [(s.req.priority, len(s.req.tokens), i)
+                 for i, s in enumerate(self.slots)
+                 if s.req is not None and not s.req.done
+                 and s.req.priority < req.priority
+                 and self._eff_priority(s.req, now) < eff]
+        return min(cands)[2] if cands else None
+
+    def _preempt(self, slot_id: int) -> None:
+        """Evict a running sequence: KV pages release into the prefix
+        cache (when present — the computed rows survive as a resident,
+        evictable prefix and re-admission prefills only the suffix),
+        the request re-queues with its tokens attached.  A PREFILLING
+        victim just drops its partial dense work — nothing has been
+        scattered to pages yet, so there is nothing to preserve."""
+        slot = self.slots[slot_id]
+        req = slot.req
+        if self.prefix is not None:
+            if not slot.prefilling and slot.length > 0:
+                full = np.concatenate(
+                    [req.prompt, np.asarray(req.tokens, np.int32)])
+                self._preempt_pages_saved += self.prefix.insert(
+                    full[:slot.length], slot.pages)
+            self.allocator.release(slot.pages)
+        else:
+            self.allocator.free(slot.pages)
+        self.block_tables[slot_id, :] = -1
+        req.preemptions += 1
+        self._preempted += 1
+        self._queue.append(req)
+        slot.req, slot.pages, slot.length = None, [], 0
+        slot.seq, slot.dense, slot.pf_pos, slot.n_prefix = None, None, 0, 0
+
+    def _admit(self, allowance: int | None) -> int:
+        """Priority admission: fill slots while the head of the
+        effective-priority order fits — preempting strictly-lower
+        priority runners under slot/pool pressure, never skipping past
+        an unadmittable head (within a class that keeps FIFO's
+        no-starvation guarantee; across classes aging provides it).
+        Returns first tokens emitted (unbudgeted mode prefills each
+        admission to completion right here, so a later same-wave lookup
+        sees the earlier admission's prefix)."""
+        produced = 0
+        while self._queue:
+            now = time.perf_counter()
+            self._queue.sort(
+                key=lambda r: (-self._eff_priority(r, now), r.rid))
             req = self._queue[0]
+            # p99-targeted deferral: even one chunk of prefill would
+            # push the in-flight decoders past the SLO this step
+            if (self.slo_s is not None and allowance == 0
+                    and any(s.decoding for s in self.slots)):
+                self._deferred_steps += 1
+                break
+            slot_id = self._free_slot()
+            if slot_id is None:
+                victim = self._pick_victim(req, now)
+                if victim is None:
+                    break
+                self._preempt(victim)
+                slot_id = victim
             need = self._pages_for_request(req)
+            seq = req.seq
             m, shared = 0, []
             if self.prefix is not None:
                 # cap the hit at n-1: at least one suffix token must run
                 # through prefill to produce the first output logits
                 # (an int8 tree additionally rounds the hit down to a
                 # page boundary — see RadixPrefixCache.full_pages_only)
-                m, shared = self.prefix.lookup(req.prompt[:-1])
+                m, shared = self.prefix.lookup(seq[:-1])
             fork = m % self.page_size != 0
             fresh_n = need - len(shared) + (1 if fork else 0)
-            if not self.allocator.can_alloc(fresh_n):
+            while not self.allocator.can_alloc(fresh_n):
                 if self.prefix is not None:
                     self.prefix.evict(fresh_n - self.allocator.num_free)
-                if not self.allocator.can_alloc(fresh_n):
+                    if self.allocator.can_alloc(fresh_n):
+                        break
+                victim = self._pick_victim(req, now)
+                if victim is None:
+                    break
+                self._preempt(victim)
+            if not self.allocator.can_alloc(fresh_n):
+                if self.prefix is not None:
                     self.allocator.release(shared)
-                    break  # FIFO: don't skip ahead of the head-of-queue
+                break  # keep head-of-queue blocking: no skipping
             fresh = self.allocator.alloc(fresh_n)
             if fork:
                 # the shared tail page is partially filled: this slot
@@ -281,60 +549,109 @@ class ServingEngine:
                 pages = shared[:-1] + fresh
             else:
                 pages = shared + fresh
-            self._queue.pop(0)
-            self._prefill_into(slot_id, slot, req, pages, n_prefix=m)
+            self._queue.remove(req)
+            self._assign(slot_id, req, pages, m, now)
+            if self.prefill_budget is None:
+                # admission-stall discipline: run this prefill to
+                # completion before looking at the next request (the
+                # completion-time prefix insert is then visible to the
+                # rest of the wave, preserving same-wave sharing)
+                slot = self.slots[slot_id]
+                t0, chunks = time.perf_counter(), 0
+                while slot.prefilling:
+                    self._advance_slot(slot_id, slot)
+                    chunks += 1
+                produced += 1
+                self._note_cost("_chunk_ewma",
+                                (time.perf_counter() - t0) / chunks)
+        return produced
 
-    def _prefill_into(self, slot_id, slot, req, pages, n_prefix=0) -> None:
-        n, m = len(req.prompt), n_prefix
-        ns = n - m  # unseen suffix: the only tokens that run the model
-        self.block_tables[slot_id, :] = -1
-        self.block_tables[slot_id, :len(pages)] = pages
-        # batch-1 dense prefill in the DYNAMIC-length contract: the
-        # prompt is right-padded to a chunk-granular bucket BEFORE the
-        # jit boundary and the real length rides as a traced scalar —
-        # one compile per bucket, not per distinct prompt length
-        t_pad = max(self._prefill_chunk,
-                    -(-ns // self._prefill_chunk) * self._prefill_chunk)
+    def _assign(self, slot_id: int, req: Request, pages: list, m: int,
+                now: float) -> None:
+        """Move a request into a slot in PREFILLING state: allocate its
+        per-slot dense cache (seeded from shared prefix pages on a hit)
+        — no model work happens here, and the slot's block-table row
+        stays -1 until the finished prefill scatters into the pages."""
+        slot = self.slots[slot_id]
+        seq = req.seq
+        if req.t_admit is None:
+            req.t_admit = now
+        slot.req, slot.pages, slot.length = req, pages, 0
+        slot.seq, slot.pf_pos, slot.n_prefix = seq, m, m
         if self._dyn_prefill:
-            suffix = np.zeros((1, t_pad), np.int32)
-            suffix[0, :ns] = req.prompt[m:]
+            ns = len(seq) - m
             # the dense cache must hold prefix + suffix; bucket its
-            # capacity the same way so prefix hits don't add compiles
-            c_pad = max(t_pad,
-                        -(-(m + t_pad) // self._prefill_chunk)
-                        * self._prefill_chunk)
+            # capacity on the chunk grid so prefix hits (and resumed
+            # preemptions) don't add compile shapes
+            c_pad = max(self._bucket(ns), self._bucket(m + self._bucket(ns)))
             dense = self._tf.init_caches(self.cfg, 1, c_pad, self._dtype)
             if m:
                 # gather the cached prefix rows into the dense cache and
                 # set len=m: prefill resumes at position m, attending
                 # over the seeded rows without recomputing them
-                dense = self._seed(dense, self.blocks,
-                                   jnp.asarray(self.block_tables[slot_id]),
+                row = np.full((self.max_pp,), -1, np.int32)
+                row[:len(pages)] = pages
+                dense = self._seed(dense, self.blocks, jnp.asarray(row),
                                    jnp.int32(m))
-            tok, dense = self._prefill(self.params, jnp.asarray(suffix),
-                                       dense, n_tokens=jnp.int32(ns))
-        else:  # SWA: pad rows would shift the rolling buffer
-            dense = self._tf.init_caches(self.cfg, 1, t_pad, self._dtype)
-            tok, dense = self._prefill(self.params,
-                                       jnp.asarray(req.prompt)[None], dense)
+        else:  # SWA: monolithic exact-shape prefill (no budget allowed)
+            dense = self._tf.init_caches(self.cfg, 1,
+                                         self._bucket(len(seq)), self._dtype)
+        slot.dense = dense
+
+    # -- chunked prefill ----------------------------------------------------
+
+    def _advance_slot(self, slot_id: int, slot: _Slot) -> int:
+        """Run ONE prefill chunk for a PREFILLING slot (the dynamic-
+        length contract: a fixed (1, chunk) piece with the real token
+        count traced — every chunk call jits at one shape per dense-
+        cache bucket).  Returns prompt tokens consumed; the slot
+        transitions to DECODING when the last chunk lands."""
+        seq, n = slot.seq, len(slot.seq)
+        if not self._dyn_prefill:  # SWA: single exact pass
+            tok, slot.dense = self._prefill(self.params,
+                                            jnp.asarray(seq)[None],
+                                            slot.dense)
+            slot.pf_pos, k = n, n
+        else:
+            k = min(self._prefill_chunk, n - slot.pf_pos)
+            piece = np.zeros((1, self._prefill_chunk), np.int32)
+            piece[0, :k] = seq[slot.pf_pos:slot.pf_pos + k]
+            tok, slot.dense = self._prefill(self.params, jnp.asarray(piece),
+                                            slot.dense,
+                                            n_tokens=jnp.int32(k))
+            slot.pf_pos += k
+        self._prefill_chunk_calls += 1
+        if slot.pf_pos >= n:
+            self._finish_prefill(slot_id, slot, tok)
+        return k
+
+    def _finish_prefill(self, slot_id: int, slot: _Slot, tok) -> None:
+        """Last chunk landed: scatter the dense rows into the slot's
+        pages, publish the block-table row, emit the first token, and
+        flip the slot to DECODING."""
+        req, seq, m, pages = slot.req, slot.seq, slot.n_prefix, slot.pages
+        n = len(seq)
+        self.block_tables[slot_id, :] = -1
+        self.block_tables[slot_id, :len(pages)] = pages
         # SWA dense prefill is a rolling buffer: row j holds logical
         # position n - t_buf + j (ordered snapshot) — tell the copy
         w = self.cfg.sliding_window
+        t_pad = self._bucket(n)
         t_buf = min(t_pad, w) if w else t_pad
         row0 = n - t_buf if (w and t_buf <= w) else 0
         # row_lo=m: rows < m came from shared pages this slot may only
         # READ — scatter back just what this prefill computed
-        self.blocks = self._copy(self.blocks, dense["blocks"],
+        self.blocks = self._copy(self.blocks, slot.dense["blocks"],
                                  jnp.asarray(self.block_tables[slot_id]),
                                  jnp.int32(n), jnp.int32(row0),
                                  jnp.int32(m))
+        slot.dense = None
         if self.spec_k:
-            # draft prefill: FULL prompt (the draft shares no pages, so
-            # no prefix shortcut), into the slot's static draft pages
-            dpad = max(self._prefill_chunk,
-                       -(-n // self._prefill_chunk) * self._prefill_chunk)
+            # draft prefill: FULL sequence (the draft shares no pages,
+            # so no prefix shortcut), into the slot's static draft pages
+            dpad = self._bucket(n)
             dprompt = np.zeros((1, dpad), np.int32)
-            dprompt[0, :n] = req.prompt
+            dprompt[0, :n] = seq
             ddense = self._tf.init_caches(self.draft_cfg, 1, dpad,
                                           self._dtype)
             _, ddense = self._draft_prefill(self.draft_params,
@@ -346,18 +663,59 @@ class ServingEngine:
                 jnp.int32(n), jnp.int32(0))
         self._admitted += 1
         self._prompt_tokens += n
-        self._prefilled_tokens += ns if self._dyn_prefill else n
+        self._prefilled_tokens += (n - m) if self._dyn_prefill else n
         if self.prefix is not None:
-            # index the prompt right away so concurrent admissions in
-            # the same wave share it too
-            self.prefix.insert(req.prompt, pages)
+            # index the sequence now that its rows are physically in
+            # the pages (an in-flight prefill must never be served)
+            self.prefix.insert(seq, pages)
         now = time.perf_counter()
-        req.t_first = now
+        if req.t_first is None:
+            req.t_first = now
         req.tokens.append(int(tok[0]))
         req.token_times.append(now)
-        slot.req, slot.pages, slot.length = req, pages, n
+        slot.length = n
         if self.eos_id is not None and req.tokens[-1] == self.eos_id:
             req.max_new = len(req.tokens)  # eos at prefill: done already
+
+    def _advance_prefills(self, allowance: int | None) -> int:
+        """Spend this step's prefill allowance advancing PREFILLING
+        slots round-robin, one chunk at a time (a slot admitted earlier
+        never monopolizes the budget).  Unlimited allowance drains them
+        all.  Returns first tokens emitted by finished prefills."""
+        spent, chunks, produced = 0, 0, 0
+        t0 = time.perf_counter()
+        while True:
+            live = [(i, s) for i, s in enumerate(self.slots)
+                    if s.prefilling]
+            if not live or (allowance is not None and spent >= allowance):
+                break
+            for slot_id, slot in live:
+                if allowance is not None and spent >= allowance:
+                    break
+                spent += self._advance_slot(slot_id, slot)
+                chunks += 1
+                if not slot.prefilling:
+                    produced += 1
+        if chunks:
+            # sample the chunk cost periodically rather than every step:
+            # an accurate sample needs a device sync (block_until_ready),
+            # and paying that round-trip on EVERY interleaved step costs
+            # real throughput — the EWMA only feeds the SLO throttle, so
+            # a 1-in-8 probe keeps it current at ~1/8th the sync cost
+            self._chunk_probe += 1
+            if self._chunk_ewma is None or self._chunk_probe % 8 == 0:
+                # a still-prefilling slot's dense cache is the freshest
+                # dispatched work; if every prefill finished this step,
+                # its rows were scattered into the shared pools instead
+                live = next((s.dense for s in self.slots if s.prefilling),
+                            None)
+                tail = live if live is not None else self.blocks
+                jax.block_until_ready(jax.tree_util.tree_leaves(tail)[0])
+                self._note_cost("_chunk_ewma",
+                                (time.perf_counter() - t0) / chunks)
+        return produced
+
+    # -- retirement ---------------------------------------------------------
 
     def _retire(self, slot_id, slot) -> None:
         req = slot.req
@@ -367,60 +725,67 @@ class ServingEngine:
             # valid, and row j holds the KV of sequence token j — the
             # LAST generated token never ran through the model, so it
             # has no row and stays out of the index
-            seq = np.concatenate(
-                [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
-            self.prefix.insert(seq[:slot.length], slot.pages)
+            full = np.concatenate(
+                [req.prompt, np.asarray(req.tokens, np.int32)])
+            self.prefix.insert(full[:slot.length], slot.pages)
             self.allocator.release(slot.pages)
         else:
             self.allocator.free(slot.pages)
         self.block_tables[slot_id, :] = -1
         self._done.append(req)
         slot.req, slot.pages, slot.length = None, [], 0
+        slot.seq, slot.dense, slot.pf_pos, slot.n_prefix = None, None, 0, 0
 
     # -- the engine step ----------------------------------------------------
 
     def step(self) -> int:
-        """Admit what fits, run one batched decode over the active
-        slots, retire what finished.  Returns tokens generated."""
+        """Admit what fits, spend the prefill allowance, run one batched
+        decode over the DECODING slots, retire what finished.  Returns
+        tokens generated (decode + prefill first tokens)."""
         # retire-before-admit: a request whose LAST token came from the
         # previous step (or from prefill, max_new == 1) frees its pages
         # for this step's admissions
         for sid, slot in enumerate(self.slots):
-            if slot.req is not None and slot.req.done:
+            if slot.decoding and slot.req.done:
                 self._retire(sid, slot)
-        self._admit()
+        now = time.perf_counter()
+        allowance = self._prefill_allowance(now)
+        produced = self._admit(allowance)
+        produced += self._advance_prefills(allowance)
         # max_new == 1 requests finish at prefill: retire before the
         # decode so they don't produce an extra token
         for sid, slot in enumerate(self.slots):
-            if slot.req is not None and slot.req.done:
+            if slot.decoding and slot.req.done:
                 self._retire(sid, slot)
-        if self.active == 0:
-            return 0
+        if not any(s.decoding for s in self.slots):
+            return produced
         if self.spec_k:
-            produced = self._spec_step()
+            produced += self._spec_step()
             self.steps += 1
             return produced
 
+        t_dec = time.perf_counter()
         last = np.zeros((self.max_slots, 1), np.int32)
         for sid, slot in enumerate(self.slots):
-            if slot.req is not None:
+            if slot.decoding:
                 last[sid, 0] = slot.req.tokens[-1]
         caches = {
             "blocks": self.blocks,
             "block_tables": jnp.asarray(self.block_tables),
-            "lens": jnp.asarray(
-                np.array([s.length for s in self.slots], np.int32)),
+            "lens": jnp.asarray(np.array(
+                [s.length if s.decoding else 0 for s in self.slots],
+                np.int32)),
         }
         tok, caches = self._decode(self.params, jnp.asarray(last), caches)
         self.blocks = caches["blocks"]
         self.steps += 1
-        tok = np.asarray(tok)
+        tok = np.asarray(tok)  # blocks: the step streams its tokens
+        self._note_cost("_decode_ewma", time.perf_counter() - t_dec)
         now = time.perf_counter()
-        produced = 0
         for sid, slot in enumerate(self.slots):
-            req = slot.req
-            if req is None:
+            if not slot.decoding:
                 continue
+            req = slot.req
             slot.length += 1
             t = int(tok[sid, 0])
             req.tokens.append(t)
@@ -431,7 +796,7 @@ class ServingEngine:
         return produced
 
     def _spec_step(self) -> int:
-        """One speculative round over the active slots: draft proposes
+        """One speculative round over the DECODING slots: draft proposes
         ``spec_k`` tokens, the target verifies all of them in one
         multi-token paged step, the longest matching prefix plus the
         target's own continuation is emitted.
@@ -443,13 +808,17 @@ class ServingEngine:
         (induction over columns).  Rejected rows sit at/after the
         advanced length — masked by every later attend and overwritten
         by later writes — so no physical rollback is needed.
+        PREFILLING slots ride along masked (len 0, block-table -1, no
+        emission) exactly like empty ones.
         """
         k = self.spec_k
+        t_dec = time.perf_counter()
         last = np.zeros((self.max_slots, 1), np.int32)
         for sid, slot in enumerate(self.slots):
-            if slot.req is not None:
+            if slot.decoding:
                 last[sid, 0] = slot.req.tokens[-1]
-        lens = np.array([s.length for s in self.slots], np.int32)
+        lens = np.array([s.length if s.decoding else 0 for s in self.slots],
+                        np.int32)
         # draft chain: k+1 sequential single-token steps — outputs
         # 0..k-1 are the proposals, the extra step writes the LAST
         # proposal's KV row so the draft cache stays in lockstep with
@@ -476,13 +845,14 @@ class ServingEngine:
                                       caches)
         self.blocks = caches["blocks"]
         greedy = np.asarray(greedy)
+        self._note_cost("_decode_ewma", time.perf_counter() - t_dec)
         now = time.perf_counter()
         produced = 0
         self._spec_steps += 1
         for sid, slot in enumerate(self.slots):
-            req = slot.req
-            if req is None:
+            if not slot.decoding:
                 continue
+            req = slot.req
             self._spec_slot_steps += 1
             a = 0
             while a < k and props[sid, a] == greedy[sid, a]:
@@ -514,7 +884,7 @@ class ServingEngine:
             self.step()
         # a trailing retire pass: the final step's completions
         for sid, slot in enumerate(self.slots):
-            if slot.req is not None and slot.req.done:
+            if slot.decoding and slot.req.done:
                 self._retire(sid, slot)
         if self._queue or self.active:
             raise RuntimeError(
@@ -526,18 +896,32 @@ class ServingEngine:
     # -- introspection ------------------------------------------------------
 
     def stats(self) -> dict:
-        """Counters for the run so far: admission, prefix-cache hit
-        rates (prefill tokens served from shared pages vs computed),
-        pool sharing, and speculative acceptance."""
+        """Counters for the run so far: admission, scheduling (budget /
+        preemption / SLO deferral), prefix-cache hit rates (prefill
+        tokens served from shared pages vs computed), pool sharing, and
+        speculative acceptance."""
         s = {
             "steps": self.steps,
             "admitted": self._admitted,
             "rejected": self._rejected,
             "prompt_tokens": self._prompt_tokens,
             "prefilled_tokens": self._prefilled_tokens,
+            "prefill_chunk_calls": self._prefill_chunk_calls,
             "pages_free": self.allocator.num_free,
             "pages_shared": self.allocator.num_shared,
+            "preemptions": self._preempted,
+            "preempt_pages_saved": self._preempt_pages_saved,
         }
+        if self.prefill_budget is not None:
+            s["prefill_budget"] = self.prefill_budget
+        if self.slo_s is not None:
+            s.update(slo_ms=self.slo_s * 1e3,
+                     slo_deferred_steps=self._deferred_steps,
+                     slo_throttled_steps=self._throttled_steps)
+        if self._chunk_ewma is not None:
+            s["chunk_cost_ms"] = self._chunk_ewma * 1e3
+        if self._decode_ewma is not None:
+            s["decode_cost_ms"] = self._decode_ewma * 1e3
         if self.prefix is not None:
             s.update(
                 prefix_lookups=self.prefix.lookups,
@@ -560,15 +944,27 @@ class ServingEngine:
 
 def latency_stats(requests) -> dict:
     """p50/p99 per-token latency + request latency over a finished
-    trace (seconds)."""
-    gaps, req_lat, ttft = [], [], []
+    trace (seconds).  ``token_*`` percentiles measure from SUBMISSION
+    (a request's first gap is its TTFT, so queue wait shows up in the
+    tail); ``itl_*`` are the INTER-token gaps only — the streaming
+    experience of an already-started request, the number an SLO on
+    "time between tokens" targets and the one admission-time prefill
+    stalls inflate.  Queue wait is submit -> first admission, TTFT is
+    submit -> first token."""
+    gaps, itl, req_lat, ttft, qwait = [], [], [], [], []
     for r in requests:
         ts = [r.t_submit] + r.token_times
         gaps += [b - a for a, b in zip(ts, ts[1:])]
+        itl += [b - a for a, b in zip(r.token_times, r.token_times[1:])]
         req_lat.append(r.t_done - r.t_submit)
         ttft.append(r.t_first - r.t_submit)
+        qwait.append(r.t_admit - r.t_submit)
     gaps.sort()
+    itl.sort()
     ttft.sort()
+    qwait.sort()
+    if not itl:  # every request emitted a single token
+        itl = [0.0]
 
     def pct(xs, p):
         return xs[min(len(xs) - 1, int(p * len(xs)))]
@@ -577,7 +973,35 @@ def latency_stats(requests) -> dict:
         "tokens": sum(len(r.tokens) for r in requests),
         "token_p50_s": pct(gaps, 0.50),
         "token_p99_s": pct(gaps, 0.99),
+        "itl_p50_s": pct(itl, 0.50),
+        "itl_p99_s": pct(itl, 0.99),
         "ttft_p50_s": pct(ttft, 0.50),
         "ttft_p99_s": pct(ttft, 0.99),
+        "queue_p50_s": pct(qwait, 0.50),
+        "queue_p99_s": pct(qwait, 0.99),
         "request_mean_s": sum(req_lat) / len(req_lat),
+    }
+
+
+def phase_breakdown(requests) -> dict:
+    """Where the p99-latency request spent its life: queue wait
+    (submit -> admit), prefill (admit -> first token) and decode
+    (first -> last token) as fractions of its total latency, plus the
+    fleet-wide mean shares — the row serving_bench archives so the
+    trajectory shows WHICH phase the tail lives in."""
+    lat = sorted(requests, key=lambda r: r.t_done - r.t_submit)
+    r99 = lat[min(len(lat) - 1, int(0.99 * len(lat)))]
+
+    def shares(r):
+        total = max(r.t_done - r.t_submit, 1e-12)
+        return ((r.t_admit - r.t_submit) / total,
+                (r.t_first - r.t_admit) / total,
+                (r.t_done - r.t_first) / total)
+
+    q99, p99, d99 = shares(r99)
+    mean = [sum(xs) / len(lat) for xs in zip(*(shares(r) for r in lat))]
+    return {
+        "p99_queue": q99, "p99_prefill": p99, "p99_decode": d99,
+        "mean_queue": mean[0], "mean_prefill": mean[1],
+        "mean_decode": mean[2],
     }

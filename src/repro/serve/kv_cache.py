@@ -201,6 +201,7 @@ class RadixPrefixCache:
         self.lookups = 0
         self.hits = 0
         self.evicted_pages = 0
+        self.inserted_pages = 0  # pages the tree newly adopted
         self._tick = 0        # monotonic LRU clock
 
     # -- introspection ------------------------------------------------------
@@ -268,20 +269,26 @@ class RadixPrefixCache:
 
     # -- insert -------------------------------------------------------------
 
-    def insert(self, tokens, pages) -> None:
+    def insert(self, tokens, pages) -> int:
         """Record ``tokens`` (whose KV rows live in ``pages``, in page
         order) in the tree.  Adopted pages gain a tree-owned reference;
         the caller's references are untouched (a slot still releases
-        its own pages at retirement).  Duplicate chunks dedup onto the
-        existing node; a partial leaf overtaken by a longer chunk
-        upgrades in place (partial chunks are always leaves, so the
-        swap can't orphan descendants)."""
+        its own pages at retirement — preemption relies on exactly
+        this: insert then release keeps the tree's reference as the
+        page's ONLY holder, so the KV survives, resident but
+        evictable, until re-admission looks it up).  Duplicate chunks
+        dedup onto the existing node; a partial leaf overtaken by a
+        longer chunk upgrades in place (partial chunks are always
+        leaves, so the swap can't orphan descendants).  Returns the
+        number of pages the tree NEWLY adopted (0 when the sequence
+        was already fully covered) — the engine's preemption
+        accounting reports it as work preserved across the evict."""
         self._tick += 1
         pg = self.page_size
         toks = [int(t) for t in tokens]
         chunks = [tuple(toks[i:i + pg]) for i in range(0, len(toks), pg)]
         assert len(chunks) <= len(pages), (len(chunks), len(pages))
-        node = self.root
+        node, adopted = self.root, 0
         for ci, chunk in enumerate(chunks):
             page = pages[ci]
             if len(chunk) < pg and self.full_pages_only:
@@ -293,13 +300,15 @@ class RadixPrefixCache:
                     if o == len(chunk):
                         # existing chunk extends ours: already covered
                         c.last_used = self._tick
-                        return
+                        return adopted
                     if o == len(c.chunk) and o < len(chunk):
                         # partial leaf upgraded by this longer chunk
                         if c.page != page:
                             self.allocator.ref([page])
                             self.allocator.release([c.page])
                             c.page = page
+                            adopted += 1
+                            self.inserted_pages += 1
                         del node.children[key]
                         c.chunk = chunk
                         node.children[chunk] = c
@@ -308,11 +317,14 @@ class RadixPrefixCache:
                 if child is None:
                     child = _RadixNode(chunk, page)
                     self.allocator.ref([page])
+                    adopted += 1
+                    self.inserted_pages += 1
                     node.children[chunk] = child
             child.last_used = self._tick
             if len(chunk) < pg:
                 break  # partial tail: nothing descends past it
             node = child
+        return adopted
 
     # -- eviction -----------------------------------------------------------
 

@@ -49,7 +49,20 @@ def make_prefill_step(cfg, chunk: int = 4096):
     a static shape (logits select the real last position per chunk,
     ``len`` rewinds by a traced amount).  Attention-cache families
     only, no ``embeds``/enc-dec.
+
+    The dynamic contract is also RESUMABLE: because ``len`` always
+    rewinds to the true token count, calling again with the next piece
+    continues exactly where the last call stopped.  The SLO engine's
+    decode-interleaved prefill is built on this — it feeds one
+    ``(1, chunk)`` right-padded piece per call (``s <= chunk``, the
+    single-``transformer.prefill`` fast path), so a whole prompt
+    prefills across many engine steps at ONE compile shape per
+    dense-cache capacity bucket, pausable after every chunk.  The
+    chosen ``chunk`` is exposed as ``prefill_step.chunk`` so callers
+    slicing their own pieces can't drift from the jitted shape.
     """
+    if chunk < 1:
+        raise ValueError(f"prefill chunk must be >= 1, got {chunk}")
     pad_ok = not (cfg.ssm_state or cfg.sliding_window)
 
     def run_chunks(tokens, caches, apply_chunk):
@@ -128,6 +141,7 @@ def make_prefill_step(cfg, chunk: int = 4096):
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_tok, caches
 
+    prefill_step.chunk = chunk
     return prefill_step
 
 
