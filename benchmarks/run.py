@@ -12,10 +12,12 @@ whole bench family), and a pattern matching nothing fails fast.
 ``--list`` prints the registry.  CI smoke runs
 ``--only kernel_bench,attn_bench`` and, under 4 fake devices,
 ``--only pipeline_bench``, ``--only serving_bench``,
-``--only quant_bench``, ``--only spec_bench``, ``--only ft_bench`` and
-``--only slo_bench`` — their rows go to ``BENCH_serving.json`` /
-``BENCH_pipeline.json`` / ``BENCH_quant.json`` / ``BENCH_spec.json`` /
-``BENCH_ft.json`` / ``BENCH_slo.json``.
+``--only quant_bench``, ``--only spec_bench``, ``--only ft_bench``,
+``--only slo_bench`` and ``--only serve_ft_bench`` — their rows go to
+``BENCH_serving.json`` / ``BENCH_pipeline.json`` / ``BENCH_quant.json``
+/ ``BENCH_spec.json`` / ``BENCH_ft.json`` / ``BENCH_slo.json`` /
+``BENCH_serve_ft.json``.  A failed module names itself in the nonzero
+exit (``SystemExit("benchmark gate failure in: ...")``).
 """
 
 from __future__ import annotations
@@ -34,10 +36,12 @@ QUANT_JSON = "BENCH_quant.json"
 SPEC_JSON = "BENCH_spec.json"
 FT_JSON = "BENCH_ft.json"
 SLO_JSON = "BENCH_slo.json"
+SERVE_FT_JSON = "BENCH_serve_ft.json"
 #: modules whose rows are archived separately from the kernel JSON
 _SPLIT_JSON = {"pipeline_bench": PIPELINE_JSON, "serving_bench": SERVING_JSON,
                "quant_bench": QUANT_JSON, "spec_bench": SPEC_JSON,
-               "ft_bench": FT_JSON, "slo_bench": SLO_JSON}
+               "ft_bench": FT_JSON, "slo_bench": SLO_JSON,
+               "serve_ft_bench": SERVE_FT_JSON}
 
 
 def _capture(mod_main):
@@ -95,6 +99,7 @@ def main(argv=None) -> None:
         pipeline_bench,
         power,
         quant_bench,
+        serve_ft_bench,
         serving_bench,
         slo_bench,
         spec_bench,
@@ -115,6 +120,7 @@ def main(argv=None) -> None:
         ("quant_bench", quant_bench.main),
         ("spec_bench", spec_bench.main),
         ("ft_bench", ft_bench.main),
+        ("serve_ft_bench", serve_ft_bench.main),
         ("strategy_tpu", strategy_tpu.main),
         ("power", power.main),
     ]
@@ -167,8 +173,11 @@ def main(argv=None) -> None:
         if mod in per_module:
             _write_json(per_module[mod], path)
     if failed:
+        # name the casualties in the exit itself: CI logs truncate, and
+        # "exit 1" without the which is a debugging session, not a signal
         print(f"\nFAILED modules: {failed}")
-        raise SystemExit(1)
+        raise SystemExit(
+            f"benchmark gate failure in: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -30,6 +30,25 @@ paper's reconfigurable cluster must survive:
 ``slowdown`` is a state over a step interval; ``nan`` is a property of
 a *data index* (so the replay after rollback sees it again unless the
 batch is skipped — which is exactly what the supervisor must do).
+
+Four **serving** fault kinds extend the taxonomy to the inference tier
+(consumed by :class:`repro.serve.supervisor.ServeSupervisor`; all
+one-shot, ``step`` counts supervisor steps):
+
+``decode_nan``   a decode step poisons one slot's KV pages with
+                 non-finite rows (``slot=-1``: first active slot) — the
+                 supervisor's pool probe must find the poison, purge it
+                 from the radix index, quarantine pages+slot, and
+                 resume the victim from its last clean token.
+``step_hang``    the engine step wedges for ``hang_s`` seconds — the
+                 heartbeat watchdog must declare the miss and rebuild.
+``device_loss``  ``lose`` boards vanish from the enumeration the
+                 heartbeat reports — pools rebuild on the survivors.
+``pool_corrupt`` the allocator's free list gains a page a live slot
+                 still owns (``page=-1``: seeded choice of a live
+                 page) — double-ownership that only
+                 ``PageAllocator.audit()`` can see before it serves one
+                 sequence's KV to another.
 """
 
 from __future__ import annotations
@@ -68,7 +87,23 @@ def one_shot_write_fault(after_leaves: int = 1):
     return hook
 
 
-_KINDS = ("slowdown", "kill", "ckpt_crash", "nan")
+_KINDS = ("slowdown", "kill", "ckpt_crash", "nan",
+          "decode_nan", "step_hang", "device_loss", "pool_corrupt")
+
+#: fields each kind accepts in the ``--fault-plan`` grammar — a field on
+#: the wrong kind is a typo'd plan, and a typo'd fault plan silently
+#: testing nothing is worse than a crash
+_FIELDS = {
+    "slowdown": ("step", "stage", "factor", "duration"),
+    "kill": ("step", "lose"),
+    "ckpt_crash": ("step",),
+    "nan": ("step",),
+    "decode_nan": ("step", "slot"),
+    "step_hang": ("step", "hang_s"),
+    "device_loss": ("step", "lose"),
+    "pool_corrupt": ("step", "page"),
+}
+_FLOAT_FIELDS = ("factor", "hang_s")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,7 +113,10 @@ class FaultEvent:
     stage: int = 0  # slowdown: which pipeline stage / node
     factor: float = 1.0  # slowdown: service-time multiplier
     duration: int | None = None  # slowdown: steps active (None = forever)
-    lose: int = 1  # kill: devices removed
+    lose: int = 1  # kill / device_loss: devices removed
+    slot: int = -1  # decode_nan: victim slot (-1 = first active)
+    hang_s: float = 30.0  # step_hang: wedge duration (virtual seconds)
+    page: int = -1  # pool_corrupt: victim page (-1 = seeded live choice)
 
     def __post_init__(self):
         if self.kind not in _KINDS:
@@ -89,8 +127,12 @@ class FaultEvent:
         if self.kind == "slowdown" and self.factor < 1.0:
             raise ValueError(f"slowdown factor must be >= 1, got "
                              f"{self.factor}")
-        if self.kind == "kill" and self.lose < 1:
-            raise ValueError(f"kill must lose >= 1 devices, got {self.lose}")
+        if self.kind in ("kill", "device_loss") and self.lose < 1:
+            raise ValueError(f"{self.kind} must lose >= 1 devices, "
+                             f"got {self.lose}")
+        if self.kind == "step_hang" and self.hang_s <= 0:
+            raise ValueError(f"step_hang hang_s must be > 0, "
+                             f"got {self.hang_s}")
 
     def spec(self) -> str:
         parts = [f"step={self.step}"]
@@ -98,8 +140,14 @@ class FaultEvent:
             parts += [f"stage={self.stage}", f"factor={self.factor:g}"]
             if self.duration is not None:
                 parts.append(f"duration={self.duration}")
-        if self.kind == "kill":
+        if self.kind in ("kill", "device_loss"):
             parts.append(f"lose={self.lose}")
+        if self.kind == "decode_nan" and self.slot != -1:
+            parts.append(f"slot={self.slot}")
+        if self.kind == "step_hang" and self.hang_s != 30.0:
+            parts.append(f"hang_s={self.hang_s:g}")
+        if self.kind == "pool_corrupt" and self.page != -1:
+            parts.append(f"page={self.page}")
         return f"{self.kind}:" + ",".join(parts)
 
 
@@ -118,7 +166,15 @@ class FaultPlan:
     def parse(cls, spec: str, seed: int = 0) -> "FaultPlan":
         """Parse the ``--fault-plan`` CLI syntax: ``;``-separated events,
         each ``kind:key=val,key=val`` — e.g.
-        ``slowdown:step=6,stage=2,factor=3;kill:step=20,lose=1;nan:step=9``.
+        ``slowdown:step=6,stage=2,factor=3;kill:step=20,lose=1;nan:step=9``
+        or ``device_loss:step=8,lose=1;decode_nan:step=14``.
+
+        Parsing is strict so a typo'd plan fails loudly instead of
+        silently injecting nothing: unknown kinds, fields a kind does
+        not accept, non-numeric values and missing ``step`` all raise
+        ``ValueError`` naming the offending piece.  ``parse`` and
+        :meth:`spec` round-trip exactly (property-tested in
+        tests/test_serve_ft.py).
         """
         events = []
         for item in spec.split(";"):
@@ -126,14 +182,27 @@ class FaultPlan:
             if not item:
                 continue
             kind, _, rest = item.partition(":")
+            kind = kind.strip()
+            if kind not in _KINDS:
+                raise ValueError(f"unknown fault kind {kind!r} in {item!r} "
+                                 f"(one of {_KINDS})")
+            allowed = _FIELDS[kind]
             kw: dict = {}
             for pair in filter(None, (p.strip() for p in rest.split(","))):
-                k, _, v = pair.partition("=")
-                if not _ or k not in ("step", "stage", "factor", "duration",
-                                      "lose"):
-                    raise ValueError(f"bad fault field {pair!r} in {item!r}")
-                kw[k] = float(v) if k == "factor" else int(v)
-            events.append(FaultEvent(kind=kind.strip(), **kw))
+                k, eq, v = pair.partition("=")
+                if not eq or k not in allowed:
+                    raise ValueError(
+                        f"bad fault field {pair!r} in {item!r} "
+                        f"({kind} accepts {allowed})")
+                try:
+                    kw[k] = float(v) if k in _FLOAT_FIELDS else int(v)
+                except ValueError:
+                    raise ValueError(
+                        f"non-numeric value in fault field {pair!r} "
+                        f"of {item!r}") from None
+            if "step" not in kw:
+                raise ValueError(f"fault {item!r} is missing step=")
+            events.append(FaultEvent(kind=kind, **kw))
         return cls(events, seed=seed)
 
     def spec(self) -> str:
@@ -163,21 +232,51 @@ class FaultPlan:
 
     def take_kill(self, step: int) -> FaultEvent | None:
         """Consume a pending device-loss event due at/before ``step``."""
-        return self._take("kill", step)
+        return self.take("kill", step)
 
     def take_ckpt_crash(self, step: int) -> FaultEvent | None:
         """Consume a pending checkpoint-crash event due at/before
         ``step``; the caller installs :func:`one_shot_write_fault` so the
         NEXT checkpoint write dies partway (at a seeded leaf index, see
         :meth:`crash_leaf_index`)."""
-        return self._take("ckpt_crash", step)
+        return self.take("ckpt_crash", step)
 
-    def _take(self, kind: str, step: int) -> FaultEvent | None:
+    def take(self, kind: str, step: int) -> FaultEvent | None:
+        """Consume one pending one-shot event of ``kind`` due at/before
+        ``step`` — the generic injector query the serving supervisor
+        uses for its fault kinds."""
         for i, ev in enumerate(self.events):
             if i not in self._fired and ev.kind == kind and ev.step <= step:
                 self._fired.add(i)
                 return ev
         return None
+
+    _take = take  # pre-PR-9 private name
+
+    def devices_visible(self, devices, step: int,
+                        kinds=("kill", "device_loss")) -> list:
+        """The device enumeration a heartbeat at ``step`` would report:
+        every pending kill/device_loss due by now drops its ``lose``
+        trailing devices (consumed — a dead board stays dead).  This is
+        the observation-side injection that replaced the supervisors'
+        direct ``take_kill`` dispatch: the plan shrinks what the beat
+        *sees*, and detection is the monitor comparing enumerations."""
+        out = list(devices)
+        for kind in kinds:
+            while True:
+                ev = self.take(kind, step)
+                if ev is None:
+                    break
+                out = out[:max(0, len(out) - ev.lose)]
+        return out
+
+    def choose(self, options):
+        """Seeded choice among ``options`` (e.g. which live page a
+        ``pool_corrupt`` event doubles onto the free list) —
+        deterministic per plan, varies with the seed."""
+        if not options:
+            raise ValueError("cannot choose from no options")
+        return self._rng.choice(list(options))
 
     def crash_leaf_index(self, num_leaves: int) -> int:
         """Seeded choice of how many leaf files a ckpt_crash lets land

@@ -29,6 +29,28 @@ from repro.core.strategies import ClusterPlan
 
 
 @dataclasses.dataclass
+class Ewma:
+    """Exponentially-weighted moving average with a sample count.
+
+    The smoother behind the heartbeat monitor's per-host inter-beat
+    interval estimate (ft/health.py): the first sample seeds the value
+    directly (no zero-bias warmup), ``count`` lets consumers gate
+    decisions on a minimum history — a miss verdict off one sample
+    would fire on ordinary jitter.
+    """
+
+    alpha: float = 0.3
+    value: float = 0.0
+    count: int = 0
+
+    def update(self, x: float) -> float:
+        self.count += 1
+        self.value = (x if self.count == 1
+                      else (1.0 - self.alpha) * self.value + self.alpha * x)
+        return self.value
+
+
+@dataclasses.dataclass
 class StragglerReport:
     rates: dict[int, float]  # node -> relative speed (1.0 = median)
     stragglers: list[int]

@@ -8,18 +8,30 @@ mesh reformation + re-sharded restore (ft/elastic.py), and async atomic
 checkpoints (ft/checkpoint.py) — but nothing that CLOSED the loop.
 :class:`TrainSupervisor` is that loop:
 
-    step -> time stages -> StragglerMonitor
-         -> persistent straggler?   re-cut boundaries with the
-            rate-weighted DP, re-pad the LIVE state (pure gathers, no
-            checkpoint round-trip), re-jit, continue — zero steps lost
-         -> device loss?            reform the mesh from the survivors,
-            restore the latest checkpoint re-sharded onto the new
-            topology, recompute the batch schedule from the restored
-            step, resume — at most ``ckpt_every`` steps lost
-         -> non-finite loss?        roll back to the last checkpoint and
-            SKIP the poisoned batch on replay
+    step -> per-stage heartbeats -> HeartbeatMonitor -> HealthEvents
+         -> "slow"?         re-cut boundaries with the rate-weighted
+            DP, re-pad the LIVE state (pure gathers, no checkpoint
+            round-trip), re-jit, continue — zero steps lost
+         -> "device_loss"?  reform the mesh from the survivors, restore
+            the latest checkpoint re-sharded onto the new topology,
+            recompute the batch schedule from the restored step,
+            resume — at most ``ckpt_every`` steps lost
+         -> "nan"?          roll back to the last checkpoint and SKIP
+            the poisoned batch on replay
          -> checkpoint write died?  the atomic-rename design means
             nothing on disk is corrupt: sweep the torn .tmp and retry
+
+Detection is observation-driven (PR 9): after each step the supervisor
+emits one heartbeat per pipeline stage into a
+:class:`repro.ft.health.HeartbeatMonitor` — carrying the stage's
+service time, the step's device enumeration and a loss-finiteness flag
+— and reacts to the typed ``HealthEvent``s that come back.  The fault
+plan now poisons what the beats REPORT (``FaultPlan.devices_visible``
+shrinks the enumeration, ``nan_at`` poisons the loss) rather than
+steering the supervisor directly, so the detect half of the loop is
+the code a real deployment would run.  The one exception is
+``ckpt_crash``, which arms a write-path hook: its detection was always
+the save exception, recorded as a ``ckpt_retry`` event.
 
 Checkpoints are written in the CANONICAL (unpadded) layer layout, so a
 restore can target any later boundary vector or stage count — the
@@ -54,6 +66,7 @@ from repro.dist.sharding import param_specs
 from repro.ft import checkpoint as ckpt_mod
 from repro.ft.elastic import make_mesh_for
 from repro.ft.faults import one_shot_write_fault
+from repro.ft.health import HeartbeatMonitor
 from repro.ft.straggler import StragglerMonitor
 from repro.optim.adamw import AdamWConfig, OptState
 from repro.train.step import (
@@ -124,6 +137,9 @@ class TrainSupervisor:
         self.data = data or SyntheticLM(cfg.vocab, seq, batch, seed=seed)
         self.monitor = monitor or StragglerMonitor(window=8, threshold=1.3,
                                                    min_samples=4)
+        # detection runs through heartbeats: each stage beats once per
+        # step and the monitor's typed events drive the handlers below
+        self.health = HeartbeatMonitor(straggler=self.monitor)
         self.recut_cooldown = (recut_cooldown if recut_cooldown is not None
                                else self.monitor.min_samples)
         self.dtype, self.seed = dtype, seed
@@ -235,6 +251,14 @@ class TrainSupervisor:
         with self.mesh:
             _, warm = self.jitted(self.state, self.data.batch(0))
         jax.block_until_ready(warm["loss"])
+        self._reset_health()
+
+    def _reset_health(self) -> None:
+        """Post-reconfiguration amnesia: stale intervals/timings must not
+        describe the new plan, and the shrunken device enumeration must
+        not read as a SECOND loss on the next beat."""
+        self.health.reset()
+        self.health.expect_devices(0, len(self.devices))
 
     def _install_state(self, canonical) -> None:
         """Pad (if pipelined) + device_put a canonical state without
@@ -292,19 +316,19 @@ class TrainSupervisor:
 
     # -- fault handling -----------------------------------------------------
 
-    def _handle_kill(self, ev, t: int) -> int:
-        """Device loss: reform the mesh from the survivors, restore the
-        latest checkpoint re-sharded onto it, resume from its step."""
+    def _handle_kill(self, lost: int, t: int) -> int:
+        """Device loss (a ``device_loss`` HealthEvent): reform the mesh
+        from the survivors, restore the latest checkpoint re-sharded
+        onto it, resume from its step."""
         t0 = time.perf_counter()
-        if len(self.devices) - ev.lose < 1:
-            raise RuntimeError("fault plan killed the last device")
+        if len(self.devices) - lost < 1:
+            raise RuntimeError("device loss removed the last device")
         before = len(self.devices)
-        self.devices = self.devices[: before - ev.lose]
+        self.devices = self.devices[: before - lost]
         loaded = self._load_latest()
         canonical, rstep = loaded if loaded else (None, 0)
         self.boundaries = None  # re-cut for the shrunken stage count
         self._setup(canonical=canonical)
-        self.monitor.reset()
         self.events.append(RecoveryEvent(
             "rescale", t, steps_lost=t - rstep,
             recovery_s=time.perf_counter() - t0,
@@ -326,7 +350,7 @@ class TrainSupervisor:
         else:  # no checkpoint yet: restart from initialization
             rstep = 0
             self._setup()
-        self.monitor.reset()
+        self._reset_health()
         self.events.append(RecoveryEvent(
             "rollback", t, steps_lost=t - rstep,
             recovery_s=time.perf_counter() - t0,
@@ -336,21 +360,20 @@ class TrainSupervisor:
                   f"skipping batch {data_index}")
         return rstep
 
-    def _maybe_recut(self, t: int) -> None:
-        """Persistent straggler -> rate-weighted DP re-cut of the LIVE
-        pipeline (no rollback: the re-pad is a pure gather)."""
+    def _maybe_recut(self, t: int, stragglers: list, rates: dict) -> None:
+        """Persistent straggler (a ``slow`` HealthEvent) -> rate-weighted
+        DP re-cut of the LIVE pipeline (no rollback: the re-pad is a
+        pure gather).  ``stragglers``/``rates`` come from the event's
+        detail — the monitor's verdict over the beats it has seen."""
         if self.strategy != "pipeline" or self.stages < 2:
             return
         if t < self._recut_ready:
-            return
-        rep = self.monitor.report()
-        if not rep.stragglers:
             return
         from repro.core.scheduler import recut_boundaries
 
         t0 = time.perf_counter()
         new = tuple(recut_boundaries(self.cfg, self.seq, self.stages,
-                                     rep.rates))
+                                     rates))
         old = tuple(self.boundaries)
         if new == old:
             # plan already compensates the observed rates (or the rates
@@ -361,32 +384,51 @@ class TrainSupervisor:
         live = repad_pipeline_state(self.state, self.cfg, old, new)
         self.boundaries = new
         self._setup(padded=live)
-        self.monitor.reset()
         self._recut_ready = t + self.recut_cooldown
         self.events.append(RecoveryEvent(
             "recut", t, steps_lost=0,
             recovery_s=time.perf_counter() - t0,
-            detail={"stragglers": rep.stragglers,
-                    "rates": {n: round(r, 3) for n, r in rep.rates.items()},
+            detail={"stragglers": stragglers,
+                    "rates": {n: round(r, 3) for n, r in rates.items()},
                     "old": old, "new": new}))
-        self._log(f"straggler(s) {rep.stragglers} at step {t}: re-cut "
+        self._log(f"straggler(s) {stragglers} at step {t}: re-cut "
                   f"{old} -> {new}")
 
-    def _inject_and_record(self, t: int, t_compute: float) -> float:
-        """Apportion the measured lockstep step time into per-stage
-        service times by planner cost share, apply the fault plan's
-        slowdown factors, sleep the fault's wall-clock surcharge, and
-        feed per-unit-work service times to the monitor.  Returns the
-        effective step seconds."""
+    def _observe(self, t: int, t_compute: float, loss: float) -> list:
+        """Emit one heartbeat per pipeline stage for step ``t`` and
+        return the monitor's HealthEvents.  The fault plan poisons the
+        observations here — slowdown factors scale the reported service
+        time, pending kills shrink the reported device enumeration, a
+        poisoned batch shows up as a non-finite loss flag — and the
+        monitor, not the plan, decides what they mean.
+
+        Per-unit-work service time: a slow BOARD is slow regardless of
+        how many layers it holds, so the beat carries t * factor —
+        cut-imbalance never masquerades as a straggler."""
+        now = time.monotonic()
         factors = self.plan.slowdowns_at(t) if self.plan else {}
-        shares = self._stage_shares
-        # per-unit-work service time: a slow BOARD is slow regardless of
-        # how many layers it holds, so the monitor compares t * factor —
-        # cut-imbalance never masquerades as a straggler
+        visible = (self.plan.devices_visible(self.devices, t)
+                   if self.plan else self.devices)
+        bad = not math.isfinite(loss)
+        events = []
         for s in range(self.stages):
-            self.monitor.record(s, t_compute * factors.get(s, 1.0))
+            events += self.health.beat(
+                s, t, now=now,
+                step_s=t_compute * factors.get(s, 1.0),
+                # stage 0 is the coordinator's view of the cluster; the
+                # loss is a collective output, so one stage flags it
+                devices=len(visible) if s == 0 else None,
+                nan=bad if s == 0 else False)
+        return events
+
+    def _inject_sleep(self, t: int, t_compute: float) -> float:
+        """Sleep the wall-clock surcharge an active slowdown would cost
+        the lockstep pipe, so recovery metrics stay real wall-clock
+        quantities.  Returns the effective step seconds."""
+        factors = self.plan.slowdowns_at(t) if self.plan else {}
         if not factors:
             return t_compute
+        shares = self._stage_shares
         base = max(shares) * self.stages * t_compute
         slow = max(
             shares[s] * self.stages * t_compute * factors.get(s, 1.0)
@@ -412,13 +454,11 @@ class TrainSupervisor:
             self._save(t)  # step-0 anchor so the first rollback has a target
         rollbacks = 0
         while t < self.steps:
-            if self.plan is not None:
-                kev = self.plan.take_kill(t)
-                if kev is not None:
-                    t = self._handle_kill(kev, t)
-                    continue
+            if self.plan is not None and self.ckpt is not None:
+                # write-path injection (detection is the save exception
+                # itself, recorded as a ckpt_retry event in _save)
                 cev = self.plan.take_ckpt_crash(t)
-                if cev is not None and self.ckpt is not None:
+                if cev is not None:
                     n_leaves = len(jax.tree.leaves(self._like))
                     one_shot_write_fault(self.plan.crash_leaf_index(n_leaves))
                     self._log(f"armed checkpoint-write crash at step {t}")
@@ -433,7 +473,17 @@ class TrainSupervisor:
             if self.plan is not None and self.plan.nan_at(d_idx):
                 loss = float("nan")  # injected numerically-poisoned batch
 
-            if not math.isfinite(loss):
+            # observation, then reaction: the step's heartbeats report
+            # what happened and the monitor's events say what it means
+            events = self._observe(t, t_compute, loss)
+            lost = sum(e.detail["lost"] for e in events
+                       if e.kind == "device_loss")
+            if lost:
+                # the step's output ran on the pre-loss topology —
+                # discard it and restore from the checkpoint
+                t = self._handle_kill(lost, t)
+                continue
+            if any(e.kind == "nan" for e in events):
                 rollbacks += 1
                 if rollbacks > self.max_rollbacks:
                     raise RuntimeError(
@@ -443,11 +493,16 @@ class TrainSupervisor:
                 continue
 
             self.state = new_state
-            t_eff = self._inject_and_record(t, t_compute)
+            t_eff = self._inject_sleep(t, t_compute)
             self._losses[t] = loss
             self._times[t] = t_eff
             t += 1
-            self._maybe_recut(t - 1)
+            slow = [e for e in events if e.kind == "slow"]
+            if slow:
+                # the step's LAST slow event carries the freshest rates
+                # (every stage's sample for this step is in by then)
+                self._maybe_recut(t - 1, slow[-1].detail["stragglers"],
+                                  slow[-1].detail["rates"])
             if (self.ckpt is not None and self.ckpt_every
                     and t % self.ckpt_every == 0):
                 self._save(t)

@@ -41,14 +41,26 @@ def _run_paged_engine(params, cfg, args):
     # with the prefix cache on, a zero-slack pool evicts every retired
     # prefix before its sharer arrives — double it so pages can linger
     pages = -(-max_len // args.page_size) * args.batch
-    eng = ServingEngine(
-        params, cfg, max_slots=args.batch, max_len=max_len,
+    engine_kw = dict(
+        max_slots=args.batch, max_len=max_len,
         page_size=args.page_size, kv_dtype=args.kv_dtype,
         num_pages=2 * pages if args.prefix_cache else pages,
         prefill_chunk=max(16, args.prompt // 4),
         prefix_cache=args.prefix_cache,
         draft_params=draft_params, draft_cfg=draft_cfg, spec_k=args.spec_k,
         prefill_budget=args.prefill_budget, slo_ms=args.slo_ms)
+    sup = None
+    if args.supervise or args.fault_plan or args.deadline_ms:
+        from repro.ft.faults import FaultPlan
+        from repro.serve.supervisor import ServeSupervisor
+
+        plan = (FaultPlan.parse(args.fault_plan, seed=args.fault_seed)
+                if args.fault_plan else None)
+        sup = ServeSupervisor(params, cfg, engine_kw=engine_kw,
+                              fault_plan=plan, verbose=True)
+        eng = sup.engine
+    else:
+        eng = ServingEngine(params, cfg, **engine_kw)
     priorities = ([int(p) for p in args.priority.split(",")]
                   if args.priority else [0])
     rng = jax.random.PRNGKey(1)
@@ -63,11 +75,40 @@ def _run_paged_engine(params, cfg, args):
         if args.prefix_cache and i % 2:
             prompt = jnp.concatenate([shared, prompt[args.prompt // 2:]])
         new = max(1, args.new_tokens // (1 + i % 4))
-        eng.submit(jnp.asarray(prompt), new,
-                   priority=priorities[i % len(priorities)])
-    t0 = time.time()
-    done = eng.run()
-    dt = time.time() - t0
+        if sup is not None:
+            sup.submit(jnp.asarray(prompt), new,
+                       priority=priorities[i % len(priorities)],
+                       deadline_ms=args.deadline_ms)
+        else:
+            eng.submit(jnp.asarray(prompt), new,
+                       priority=priorities[i % len(priorities)])
+    t0 = time.monotonic()
+    if sup is not None:
+        done = sup.run()
+        eng = sup.engine  # recoveries may have rebuilt it
+    else:
+        done = eng.run()
+    dt = time.monotonic() - t0
+    if sup is not None:
+        kinds = {}
+        for ev in sup.events:
+            kinds[ev.kind] = kinds.get(ev.kind, 0) + 1
+        print(f"supervisor: {sup.steps} supervised steps, "
+              f"{sup.recoveries} recoveries ({sup.rebuilds} rebuilds), "
+              f"events {kinds or '{}'}"
+              + (", DEGRADED to jnp dispatch" if sup.degraded else ""))
+        for ev in sup.events:
+            print(f"  step {ev.step}: {ev.kind} {ev.detail} "
+                  f"({ev.recovery_s * 1e3:.1f} ms)")
+        sup.restore_dispatchers()
+    finished = [r for r in done if not r.cancelled]
+    if len(finished) < len(done):
+        print(f"  {len(done) - len(finished)} requests cancelled "
+              "(deadline/shed)")
+    if not finished:
+        print("paged engine: no requests finished")
+        return
+    done = finished
     stats = latency_stats(done)
     print(f"paged engine: {len(done)} requests, {stats['tokens']} tokens "
           f"in {dt*1e3:.0f} ms over {eng.steps} decode steps "
@@ -145,6 +186,20 @@ def main(argv=None):
                     help="comma-separated priority classes cycled over "
                          "the trace (e.g. '0,1'); higher preempts lower "
                          "under pool pressure")
+    ap.add_argument("--supervise", action="store_true",
+                    help="paged engine: run under the fault-tolerant "
+                         "ServeSupervisor (heartbeats, pool audits, "
+                         "deadline enforcement, recovery)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="inject serving faults, e.g. 'device_loss:step=6,"
+                         "lose=1;decode_nan:step=14' (implies --supervise; "
+                         "see repro.ft.faults for the grammar)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the fault plan's randomized choices")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline; expired requests are "
+                         "cancelled within one supervised step (implies "
+                         "--supervise)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -181,15 +236,15 @@ def main(argv=None):
         prompts = jax.random.randint(
             jax.random.PRNGKey(1), (args.batch, args.prompt), 0, cfg.vocab
         )
-        t0 = time.time()
+        t0 = time.monotonic()
         tok, caches = prefill(params, prompts, caches)
         tok = tok[:, None]
-        print(f"prefill {args.batch}x{args.prompt} in {(time.time()-t0)*1e3:.0f} ms")
-        t0 = time.time()
+        print(f"prefill {args.batch}x{args.prompt} in {(time.monotonic()-t0)*1e3:.0f} ms")
+        t0 = time.monotonic()
         for _ in range(args.new_tokens - 1):
             tok, caches = decode(params, tok, caches)
         jax.block_until_ready(tok)
-        dt = time.time() - t0
+        dt = time.monotonic() - t0
         print(f"decode {args.new_tokens} steps: "
               f"{args.batch * args.new_tokens / dt:.0f} tok/s")
 

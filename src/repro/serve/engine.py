@@ -86,6 +86,13 @@ from repro.serve.step import (
     make_verify_step,
 )
 
+# the ONE clock behind every engine timestamp (queue wait, TTFT, SLO
+# EWMAs, aging, deadlines): monotonic, so an NTP step / DST jump can
+# never produce a negative queue wait or a bogus SLO deferral the way
+# wall-clock time.time() could.  Module-level indirection so tests (and
+# the serving supervisor's hang recovery) can install a fake clock.
+_now = time.monotonic
+
 # jitted steps are shared ACROSS engine instances: benchmarks and tests
 # routinely build one engine to warm the compile caches and a second
 # (same cfg) to measure — per-instance jax.jit wrappers would silently
@@ -126,6 +133,7 @@ class Request:
     t_first: float | None = None
     t_done: float | None = None
     preemptions: int = 0
+    cancelled: bool = False  # deadline/shed: ended without finishing
     tokens: list = dataclasses.field(default_factory=list)
     token_times: list = dataclasses.field(default_factory=list)
 
@@ -148,6 +156,7 @@ class _Slot:
     req: Request | None = None
     pages: list = dataclasses.field(default_factory=list)
     length: int = 0  # tokens in cache (prompt + generated-so-far - 1)
+    quarantined: bool = False  # poisoned lane: admission skips it
     # -- PREFILLING state (dense is the in-flight batch-1 prefill cache)
     seq: np.ndarray | None = None  # admission-time token sequence
     dense: dict | None = None
@@ -327,7 +336,7 @@ class ServingEngine:
                 draft_cfg, prefill_chunk)
             self._draft_copy = _COPY_JIT
         self.steps = 0
-        self._admitted = self._rejected = 0
+        self._admitted = self._rejected = self._cancelled = 0
         self._prompt_tokens = self._prefilled_tokens = 0
         self._spec_steps = self._spec_slot_steps = self._spec_emitted = 0
         self._preempted = 0
@@ -362,8 +371,32 @@ class ServingEngine:
                 f"max_len {self.max_len} / pool of {self.num_pages} "
                 f"pages x {self.page_size}")
         req = Request(self._next_rid, prompt, max_new, priority=priority,
-                      t_submit=time.perf_counter())
+                      t_submit=_now())
         self._next_rid += 1
+        self._queue.append(req)
+        return req
+
+    def requeue(self, req: Request) -> Request:
+        """Adopt an EXISTING request (tokens attached) into this
+        engine's queue — the cross-engine half of recovery: a
+        supervisor rebuilding pools after a fault moves the old
+        engine's in-flight requests here, and admission resumes each
+        through the preemption path (prefill prompt + generated-so-far,
+        continue decoding), so the greedy continuation is bitwise the
+        unfaulted run's.  The rid is preserved; ``_next_rid`` advances
+        past it so fresh submissions never collide."""
+        if req.cancelled or req.done:
+            raise ValueError(f"request {req.rid} already "
+                             f"{'cancelled' if req.cancelled else 'done'}")
+        need = kv_cache.pages_for(len(req.prompt) + req.max_new,
+                                  self.page_size)
+        usable = self.num_pages - self.allocator.num_quarantined
+        if need > min(self.max_pp, usable):
+            self._rejected += 1
+            raise ValueError(
+                f"request {req.rid} needs {need} pages, pool has "
+                f"{usable} usable of {self.num_pages}")
+        self._next_rid = max(self._next_rid, req.rid + 1)
         self._queue.append(req)
         return req
 
@@ -438,7 +471,7 @@ class ServingEngine:
 
     def _free_slot(self) -> int | None:
         for i, s in enumerate(self.slots):
-            if s.req is None:
+            if s.req is None and not s.quarantined:
                 return i
         return None
 
@@ -496,7 +529,7 @@ class ServingEngine:
         sees the earlier admission's prefix)."""
         produced = 0
         while self._queue:
-            now = time.perf_counter()
+            now = _now()
             self._queue.sort(
                 key=lambda r: (-self._eff_priority(r, now), r.rid))
             req = self._queue[0]
@@ -557,13 +590,13 @@ class ServingEngine:
                 # completion-time prefix insert is then visible to the
                 # rest of the wave, preserving same-wave sharing)
                 slot = self.slots[slot_id]
-                t0, chunks = time.perf_counter(), 0
+                t0, chunks = _now(), 0
                 while slot.prefilling:
                     self._advance_slot(slot_id, slot)
                     chunks += 1
                 produced += 1
                 self._note_cost("_chunk_ewma",
-                                (time.perf_counter() - t0) / chunks)
+                                (_now() - t0) / chunks)
         return produced
 
     def _assign(self, slot_id: int, req: Request, pages: list, m: int,
@@ -668,7 +701,7 @@ class ServingEngine:
             # index the sequence now that its rows are physically in
             # the pages (an in-flight prefill must never be served)
             self.prefix.insert(seq, pages)
-        now = time.perf_counter()
+        now = _now()
         if req.t_first is None:
             req.t_first = now
         req.tokens.append(int(tok[0]))
@@ -683,7 +716,7 @@ class ServingEngine:
         never monopolizes the budget).  Unlimited allowance drains them
         all.  Returns first tokens emitted by finished prefills."""
         spent, chunks, produced = 0, 0, 0
-        t0 = time.perf_counter()
+        t0 = _now()
         while True:
             live = [(i, s) for i, s in enumerate(self.slots)
                     if s.prefilling]
@@ -712,14 +745,14 @@ class ServingEngine:
                 tail = live if live is not None else self.blocks
                 jax.block_until_ready(jax.tree_util.tree_leaves(tail)[0])
                 self._note_cost("_chunk_ewma",
-                                (time.perf_counter() - t0) / chunks)
+                                (_now() - t0) / chunks)
         return produced
 
     # -- retirement ---------------------------------------------------------
 
     def _retire(self, slot_id, slot) -> None:
         req = slot.req
-        req.t_done = time.perf_counter()
+        req.t_done = _now()
         if self.prefix is not None:
             # index prompt + generated tokens: rows [0, length) are
             # valid, and row j holds the KV of sequence token j — the
@@ -736,19 +769,104 @@ class ServingEngine:
         slot.req, slot.pages, slot.length = None, [], 0
         slot.seq, slot.dense, slot.pf_pos, slot.n_prefix = None, None, 0, 0
 
+    # -- fault tolerance (driven by serve/supervisor.py) --------------------
+
+    def cancel(self, req: Request) -> bool:
+        """End a request wherever it is — queued (dequeued), PREFILLING
+        (partial dense work dropped), or DECODING (pages released) —
+        keeping its tokens so far.  Retirement minus the radix insert:
+        a deadline-dead sequence's KV is not worth indexing.  Returns
+        False if the request is unknown here (already retired,
+        cancelled, or living in a different engine)."""
+        if req in self._queue:
+            self._queue.remove(req)
+        else:
+            for sid, slot in enumerate(self.slots):
+                if slot.req is req:
+                    if self.prefix is not None:
+                        self.allocator.release(slot.pages)
+                    else:
+                        self.allocator.free(slot.pages)
+                    self.block_tables[sid, :] = -1
+                    slot.req, slot.pages, slot.length = None, [], 0
+                    slot.seq, slot.dense = None, None
+                    slot.pf_pos, slot.n_prefix = 0, 0
+                    break
+            else:
+                return False
+        req.cancelled = True
+        req.t_done = _now()
+        self._cancelled += 1
+        self._done.append(req)
+        return True
+
+    def quarantine_slot(self, slot_id: int) -> None:
+        """Permanently retire a decode lane whose state is suspect (its
+        pages held poisoned KV).  The caller tears the occupant down
+        first (:meth:`cancel` or a supervisor salvage); admission skips
+        quarantined lanes from here on."""
+        slot = self.slots[slot_id]
+        if slot.req is not None:
+            raise ValueError(
+                f"slot {slot_id} still holds request {slot.req.rid} — "
+                "tear it down before quarantining the lane")
+        slot.quarantined = True
+
+    def page_owners(self) -> dict:
+        """Claimed page ownership for :meth:`kv_cache.PageAllocator.
+        audit`: every live slot claims its block-table pages, the radix
+        tree claims one reference per node."""
+        owners = {}
+        for sid, slot in enumerate(self.slots):
+            if slot.req is not None:
+                owners[f"slot{sid}"] = list(slot.pages)
+        if self.prefix is not None:
+            owners["radix"] = self.prefix.pages()
+        return owners
+
+    def audit(self) -> dict:
+        """Zero-leak proof for the whole engine: the allocator's
+        internal invariants AND cross-checked ownership claims (slots +
+        radix tree), plus block-table/slot agreement — a DECODING
+        slot's published table row must list exactly its pages, and
+        non-decoding rows must be unmapped.  Raises
+        :class:`kv_cache.PoolAuditError`; returns the pool summary."""
+        report = self.allocator.audit(self.page_owners())
+        for sid, slot in enumerate(self.slots):
+            row = [int(p) for p in self.block_tables[sid] if p >= 0]
+            want = list(slot.pages) if slot.decoding else []
+            if row != want:
+                raise kv_cache.PoolAuditError(
+                    f"slot {sid} block table {row} != owned pages {want}")
+        return report
+
+    def take_done(self) -> list[Request]:
+        """Drain finished (and cancelled) requests — what a supervisor
+        collects across engine rebuilds; :meth:`run` uses it too."""
+        done, self._done = self._done, []
+        return done
+
     # -- the engine step ----------------------------------------------------
 
-    def step(self) -> int:
+    def step(self, debug_audit: bool = False) -> int:
         """Admit what fits, spend the prefill allowance, run one batched
         decode over the DECODING slots, retire what finished.  Returns
-        tokens generated (decode + prefill first tokens)."""
+        tokens generated (decode + prefill first tokens).
+        ``debug_audit`` runs the zero-leak :meth:`audit` after the step
+        — every page accounted for on every step, at host-side cost."""
+        produced = self._step_inner()
+        if debug_audit:
+            self.audit()
+        return produced
+
+    def _step_inner(self) -> int:
         # retire-before-admit: a request whose LAST token came from the
         # previous step (or from prefill, max_new == 1) frees its pages
         # for this step's admissions
         for sid, slot in enumerate(self.slots):
             if slot.decoding and slot.req.done:
                 self._retire(sid, slot)
-        now = time.perf_counter()
+        now = _now()
         allowance = self._prefill_allowance(now)
         produced = self._admit(allowance)
         produced += self._advance_prefills(allowance)
@@ -764,7 +882,7 @@ class ServingEngine:
             self.steps += 1
             return produced
 
-        t_dec = time.perf_counter()
+        t_dec = _now()
         last = np.zeros((self.max_slots, 1), np.int32)
         for sid, slot in enumerate(self.slots):
             if slot.decoding:
@@ -780,8 +898,8 @@ class ServingEngine:
         self.blocks = caches["blocks"]
         self.steps += 1
         tok = np.asarray(tok)  # blocks: the step streams its tokens
-        self._note_cost("_decode_ewma", time.perf_counter() - t_dec)
-        now = time.perf_counter()
+        self._note_cost("_decode_ewma", _now() - t_dec)
+        now = _now()
         for sid, slot in enumerate(self.slots):
             if not slot.decoding:
                 continue
@@ -812,7 +930,7 @@ class ServingEngine:
         emission) exactly like empty ones.
         """
         k = self.spec_k
-        t_dec = time.perf_counter()
+        t_dec = _now()
         last = np.zeros((self.max_slots, 1), np.int32)
         for sid, slot in enumerate(self.slots):
             if slot.decoding:
@@ -845,8 +963,8 @@ class ServingEngine:
                                       caches)
         self.blocks = caches["blocks"]
         greedy = np.asarray(greedy)
-        self._note_cost("_decode_ewma", time.perf_counter() - t_dec)
-        now = time.perf_counter()
+        self._note_cost("_decode_ewma", _now() - t_dec)
+        now = _now()
         produced = 0
         self._spec_steps += 1
         for sid, slot in enumerate(self.slots):
@@ -890,8 +1008,7 @@ class ServingEngine:
             raise RuntimeError(
                 f"engine stalled: {len(self._queue)} queued, "
                 f"{self.active} active after {max_steps} steps")
-        done, self._done = self._done, []
-        return done
+        return self.take_done()
 
     # -- introspection ------------------------------------------------------
 
@@ -911,7 +1028,14 @@ class ServingEngine:
             "pages_shared": self.allocator.num_shared,
             "preemptions": self._preempted,
             "preempt_pages_saved": self._preempt_pages_saved,
+            "cancelled": self._cancelled,
         }
+        if self.allocator.num_quarantined or any(
+                s.quarantined for s in self.slots):
+            s.update(
+                pages_quarantined=self.allocator.num_quarantined,
+                slots_quarantined=sum(
+                    1 for sl in self.slots if sl.quarantined))
         if self.prefill_budget is not None:
             s["prefill_budget"] = self.prefill_budget
         if self.slo_s is not None:
@@ -950,7 +1074,9 @@ def latency_stats(requests) -> dict:
     experience of an already-started request, the number an SLO on
     "time between tokens" targets and the one admission-time prefill
     stalls inflate.  Queue wait is submit -> first admission, TTFT is
-    submit -> first token."""
+    submit -> first token.  All timestamps come from the engine's
+    monotonic ``_now`` clock, so every difference here is non-negative
+    by construction — wall-clock steps cannot fabricate latency."""
     gaps, itl, req_lat, ttft, qwait = [], [], [], [], []
     for r in requests:
         ts = [r.t_submit] + r.token_times

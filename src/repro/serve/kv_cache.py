@@ -44,12 +44,21 @@ concurrent sequences.
 
 from __future__ import annotations
 
+from collections import Counter
+
 import jax.numpy as jnp
+import numpy as np
 
 from repro.optim.quant import quant_with_scale, scale_for, scale_from_amax
 
 #: serving pool dtypes: per-page-per-head f32 scales appear iff int8
 KV_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+
+
+class PoolAuditError(RuntimeError):
+    """The page pool's bookkeeping is inconsistent (leak, double
+    ownership, free/live overlap, ...) — serving on it would hand one
+    sequence's KV to another or strand capacity forever."""
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:
@@ -77,6 +86,7 @@ class PageAllocator:
         self.num_pages = num_pages
         self._free = list(range(num_pages - 1, -1, -1))
         self._refs: dict[int, int] = {}
+        self._quarantined: set[int] = set()
 
     @property
     def num_free(self) -> int:
@@ -137,6 +147,105 @@ class PageAllocator:
                     f"page {p} has {self._refs[p] - 1} live reader(s) — "
                     "release() shared pages instead of free()")
         self.release(pages)
+
+    # -- fault containment --------------------------------------------------
+
+    @property
+    def num_quarantined(self) -> int:
+        return len(self._quarantined)
+
+    def quarantine(self, pages) -> int:
+        """Remove pages from circulation entirely: a poisoned page (NaN
+        rows, a lost board's HBM slice) must never be handed to a future
+        admission.  Accepts free OR live pages — a live page loses ALL
+        its references, so callers must tear down (or have already torn
+        down) every owner first; the serving supervisor drops radix
+        nodes and victim slots before quarantining.  Idempotent per
+        page.  Returns the number newly quarantined."""
+        n = 0
+        for p in pages:
+            p = int(p)
+            if not 0 <= p < self.num_pages:
+                raise ValueError(f"page {p} out of range "
+                                 f"[0, {self.num_pages})")
+            if p in self._quarantined:
+                continue
+            if p in self._refs:
+                del self._refs[p]
+            else:
+                self._free.remove(p)
+            self._quarantined.add(p)
+            n += 1
+        return n
+
+    def audit(self, owners: dict | None = None) -> dict:
+        """Cross-check the pool's bookkeeping; raise
+        :class:`PoolAuditError` listing every violation, else return a
+        summary ``{"free", "live", "shared", "quarantined"}``.
+
+        Internal invariants (always checked): the free list holds no
+        duplicates, no page is simultaneously free and live (the
+        double-ownership a ``pool_corrupt`` fault injects: the next
+        alloc would hand a live slot's page to a new sequence), no page
+        is quarantined AND circulating, every page is accounted for
+        (free + live + quarantined == num_pages — a vanished page is a
+        leak), and every live refcount is positive.
+
+        ``owners`` optionally cross-checks CLAIMED ownership: a mapping
+        of claimant name -> list of pages it believes it holds one
+        reference on (engine slots, the radix tree).  Every live page's
+        refcount must equal its total claim count — an excess claim is
+        double ownership (two owners will both write the page), a
+        missing claim is a leak (a reference nobody will ever release).
+        """
+        problems = []
+        free_set = set(self._free)
+        if len(free_set) != len(self._free):
+            dupes = sorted(p for p, c in Counter(self._free).items()
+                           if c > 1)
+            problems.append(f"free list holds duplicates: {dupes}")
+        overlap = sorted(free_set & self._refs.keys())
+        if overlap:
+            problems.append(f"pages both free and live: {overlap}")
+        qlap = sorted(self._quarantined
+                      & (free_set | self._refs.keys()))
+        if qlap:
+            problems.append(f"quarantined pages still circulating: {qlap}")
+        known = free_set | self._refs.keys() | self._quarantined
+        missing = sorted(set(range(self.num_pages)) - known)
+        if missing:
+            problems.append(f"pages vanished (leaked): {missing}")
+        alien = sorted(p for p in known
+                       if not 0 <= p < self.num_pages)
+        if alien:
+            problems.append(f"out-of-range pages tracked: {alien}")
+        badref = sorted(p for p, r in self._refs.items() if r <= 0)
+        if badref:
+            problems.append(f"non-positive refcounts: {badref}")
+        if owners is not None:
+            claims: Counter = Counter()
+            holders: dict[int, list] = {}
+            for name, pages in owners.items():
+                for p in pages:
+                    claims[int(p)] += 1
+                    holders.setdefault(int(p), []).append(name)
+            for p, c in sorted(claims.items()):
+                r = self._refs.get(p, 0)
+                if c > r:
+                    problems.append(
+                        f"page {p}: {c} claims > refcount {r} "
+                        f"(double ownership by {holders[p]})")
+            for p, r in sorted(self._refs.items()):
+                c = claims.get(p, 0)
+                if c < r:
+                    problems.append(
+                        f"page {p}: refcount {r} > {c} claim(s) "
+                        f"(leaked reference)")
+        if problems:
+            raise PoolAuditError("; ".join(problems))
+        return {"free": len(self._free), "live": len(self._refs),
+                "shared": self.num_shared,
+                "quarantined": len(self._quarantined)}
 
 
 # ---------------------------------------------------------------------------
@@ -222,6 +331,11 @@ class RadixPrefixCache:
     def num_pages(self) -> int:
         """Pages the tree currently holds a reference on."""
         return self.num_nodes
+
+    def pages(self) -> list[int]:
+        """Every page the tree holds a reference on (one per node) —
+        the tree's ownership claim for :meth:`PageAllocator.audit`."""
+        return [c.page for _, c in self._walk()]
 
     # -- lookup -------------------------------------------------------------
 
@@ -352,6 +466,33 @@ class RadixPrefixCache:
                 self.evicted_pages += 1
         return freed
 
+    def drop_pages(self, pages) -> int:
+        """Purge every node holding one of ``pages`` AND its whole
+        subtree, releasing the tree's reference on each removed node's
+        page.  Descendants must go too: their prefixes run *through*
+        the dropped page's rows, so serving them would attend poisoned
+        (or vanished) KV.  The serving supervisor calls this before
+        quarantining pages a fault poisoned.  Returns nodes removed."""
+        bad = {int(p) for p in pages}
+        removed: list[_RadixNode] = []
+
+        def _prune(node):
+            for key, child in list(node.children.items()):
+                if child.page in bad:
+                    del node.children[key]
+                    stack = [child]
+                    while stack:
+                        c = stack.pop()
+                        removed.append(c)
+                        stack.extend(c.children.values())
+                else:
+                    _prune(child)
+
+        _prune(self.root)
+        self.allocator.release([c.page for c in removed])
+        self.evicted_pages += len(removed)
+        return len(removed)
+
     def clear(self) -> int:
         """Drop every node (release all tree-held references)."""
         nodes = [c for _, c in self._walk()]
@@ -461,6 +602,28 @@ def pool_pages_for_bytes(cfg, pool_bytes: int, page_size: int,
 def page_size_of(caches) -> int:
     pool = caches["blocks"][0]
     return next(iter(pool.values())).shape[2]
+
+
+def find_nonfinite_pages(paged_blocks) -> list[int]:
+    """Pool pages holding a non-finite value in ANY layer — the serving
+    supervisor's poisoned-KV probe (a ``decode_nan`` fault writes NaN
+    rows into a victim's pages; every page of every layer sharing that
+    pool index is then suspect, because the block table maps one
+    logical page to the same index in all layers).  int8 page rows
+    cannot hold a NaN, but their per-page f32 scales can — and a NaN
+    scale poisons every row it dequantizes — so quantized pools are
+    probed via their scale leaves.  All leaves keep the page on axis 1.
+    """
+    first = next(iter(paged_blocks[0].values()))
+    bad = np.zeros((first.shape[1],), bool)
+    for pool in paged_blocks:
+        for leaf in pool.values():
+            if leaf.dtype == jnp.int8:
+                continue  # integer codes are always finite
+            axes = tuple(i for i in range(leaf.ndim) if i != 1)
+            ok = np.asarray(jnp.all(jnp.isfinite(leaf), axis=axes))
+            bad |= ~ok
+    return [int(p) for p in np.nonzero(bad)[0]]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,661 @@
+"""Fault-tolerant serving (ISSUE-9 acceptance sweep).
+
+Covers: the heartbeat health layer (EWMA-relative miss detection with
+one miss per outage, device-loss/nan/error/slow events, min_beats
+gating), the extended fault-plan grammar (serving kinds, strict parse
+errors, parse<->spec round-trip incl. a hypothesis property), the
+zero-leak machinery (``PageAllocator.audit`` against deliberately
+corrupted pools, quarantine accounting, ``RadixPrefixCache.drop_pages``,
+the NaN pool probe), the engine's fault surface (``cancel`` /
+``requeue`` / ``quarantine_slot`` / ``step(debug_audit=True)`` and the
+module-level monotonic clock every timestamp must come from), and the
+``ServeSupervisor`` recovery paths — each injected fault recovers with
+the surviving token streams BITWISE the fault-free run's (the
+truncate -> requeue resume is the preemption path, a pure function of
+the token sequence) and the pool auditably leak-free.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.ft.faults import FaultEvent, FaultPlan
+from repro.ft.health import HealthEvent, HeartbeatMonitor
+from repro.ft.straggler import StragglerMonitor
+from repro.models import transformer as tf
+from repro.serve import engine as engine_mod
+from repro.serve import kv_cache
+from repro.serve.engine import ServingEngine, latency_stats
+from repro.serve.kv_cache import (
+    PageAllocator,
+    PoolAuditError,
+    RadixPrefixCache,
+    find_nonfinite_pages,
+)
+from repro.serve.step import generate
+from repro.serve.supervisor import ServeEvent, ServeSupervisor
+
+KEY = jax.random.PRNGKey(0)
+_CACHE: dict = {}
+
+ENGINE_KW = dict(max_slots=2, max_len=128, page_size=8, prefill_chunk=8,
+                 prefix_cache=True)
+
+
+def _cfg_params():
+    # one cfg object for the whole module: the engine's jit cache is
+    # keyed on id(cfg), so sharing it keeps compiles across tests
+    if not _CACHE:
+        cfg = get_config("qwen3_0p6b").scaled_down(num_layers=2, d_model=64,
+                                                   vocab=256)
+        _CACHE["cfg"] = cfg
+        _CACHE["params"] = tf.init(KEY, cfg, jnp.float32)
+    return _CACHE["cfg"], _CACHE["params"]
+
+
+def _oracle(params, cfg, prompt, max_new, max_len=128):
+    return np.asarray(generate(params, cfg, jnp.asarray(prompt)[None],
+                               max_new=max_new, max_len=max_len,
+                               dtype=jnp.float32))[0]
+
+
+def _reqs(cfg, seed, spec):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab, (n,)).astype(np.int32), m)
+            for n, m in spec]
+
+
+def _baseline(params, cfg, reqs, kw):
+    eng = ServingEngine(params, cfg, **kw)
+    for p, m in reqs:
+        eng.submit(p, m)
+    return {r.rid: list(r.tokens) for r in eng.run()}
+
+
+def _leak_check(eng):
+    """Post-drain zero-leak proof: audit, drop the radix tree's pins,
+    then every non-quarantined page must be back on the free list."""
+    eng.audit()
+    if eng.prefix is not None:
+        eng.prefix.clear()
+    q = eng.allocator.num_quarantined
+    assert eng.allocator.num_free == eng.num_pages - q
+
+
+# ---------------------------------------------------------------------------
+# heartbeat monitor
+# ---------------------------------------------------------------------------
+
+
+class TestHeartbeatMonitor:
+    def test_miss_is_relative_once_per_outage_then_recovers(self):
+        """A host is missing once its silence exceeds miss_factor x its
+        OWN learned interval; the outage yields exactly one miss, and
+        the next beat re-arms with ``recovered``."""
+        hm = HeartbeatMonitor(miss_factor=4.0, min_beats=3)
+        t = 100.0
+        for s in range(5):
+            assert hm.beat(0, s, now=t) == []
+            t += 1.0
+        last = t - 1.0  # EWMA interval is exactly 1.0s
+        assert hm.poll(now=last + 3.9) == []
+        evs = hm.poll(now=last + 4.1)
+        assert [e.kind for e in evs] == ["miss"]
+        assert evs[0].detail["overdue_s"] > evs[0].detail["deadline_s"]
+        assert hm.missing == [0]
+        assert hm.poll(now=last + 400.0) == []  # no event spam
+        rec = hm.beat(0, 9, now=last + 500.0)
+        assert [e.kind for e in rec] == ["recovered"]
+        assert hm.missing == []
+
+    def test_min_beats_gates_the_watchdog(self):
+        """Too little history (re-jits stretch early intervals): nobody
+        can be called late yet."""
+        hm = HeartbeatMonitor(miss_factor=2.0, min_beats=3)
+        hm.beat(0, 0, now=1.0)
+        hm.beat(0, 1, now=2.0)  # one interval recorded < min_beats
+        assert hm.poll(now=1e6) == []
+
+    def test_device_loss_needs_a_shrink(self):
+        hm = HeartbeatMonitor()
+        hm.expect_devices(0, 4)
+        evs = hm.beat(0, 0, now=0.0, devices=3)
+        assert [e.kind for e in evs] == ["device_loss"]
+        assert evs[0].detail == {"lost": 1, "before": 4, "after": 3}
+        assert hm.beat(0, 1, now=1.0, devices=3) == []  # steady state
+        assert hm.beat(0, 2, now=2.0, devices=4) == []  # growth is fine
+        evs = hm.beat(0, 3, now=3.0, devices=2)
+        assert evs[0].detail["lost"] == 2
+        # an UNSEEDED host's first enumeration is a sighting, not a loss
+        assert hm.beat(7, 0, now=4.0, devices=2) == []
+
+    def test_nan_and_error_flags(self):
+        hm = HeartbeatMonitor()
+        evs = hm.beat(0, 3, now=0.0, nan=True, error="RuntimeError: boom")
+        assert [e.kind for e in evs] == ["nan", "error"]
+        assert evs[1].detail["error"].endswith("boom")
+        assert hm.total_events == 2
+
+    def test_slow_surfaces_stragglers(self):
+        hm = HeartbeatMonitor(
+            straggler=StragglerMonitor(window=8, threshold=1.3,
+                                       min_samples=2))
+        t, evs = 0.0, []
+        for s in range(3):
+            t += 1.0
+            hm.beat(0, s, now=t, step_s=0.01)
+            t += 1.0
+            evs = hm.beat(1, s, now=t, step_s=0.05)
+        assert [e.kind for e in evs] == ["slow"]
+        assert 1 in evs[0].detail["stragglers"]
+        assert 0 not in evs[0].detail["stragglers"]
+
+    def test_reset_forgets_everything(self):
+        hm = HeartbeatMonitor(min_beats=1)
+        for s in range(4):
+            hm.beat(0, s, now=float(s), devices=4)
+        assert hm.poll(now=100.0)  # missing now
+        hm.reset()
+        assert hm.missing == []
+        assert hm.poll(now=1e6) == []  # no hosts tracked
+        # post-reset enumeration is a first sighting again
+        assert hm.beat(0, 0, now=0.0, devices=2) == []
+
+    def test_constructor_and_event_guards(self):
+        with pytest.raises(ValueError, match="miss_factor"):
+            HeartbeatMonitor(miss_factor=1.0)
+        with pytest.raises(ValueError, match="unknown health event"):
+            HealthEvent("melted", 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# fault-plan grammar
+# ---------------------------------------------------------------------------
+
+
+class TestFaultPlanGrammar:
+    def test_serving_kinds_round_trip(self):
+        spec = ("device_loss:step=8,lose=1;decode_nan:step=18;"
+                "step_hang:step=4,hang_s=2.5;pool_corrupt:step=9,page=3;"
+                "decode_nan:step=30,slot=1")
+        plan = FaultPlan.parse(spec, seed=7)
+        assert plan.spec() == spec
+        again = FaultPlan.parse(plan.spec(), seed=7)
+        assert again.events == plan.events
+
+    def test_parse_rejects_typos_loudly(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultPlan.parse("decode_naan:step=1")
+        with pytest.raises(ValueError, match="accepts"):
+            FaultPlan.parse("decode_nan:step=1,lose=2")  # field of wrong kind
+        with pytest.raises(ValueError, match="non-numeric"):
+            FaultPlan.parse("step_hang:step=1,hang_s=soon")
+        with pytest.raises(ValueError, match="missing step"):
+            FaultPlan.parse("pool_corrupt:page=3")
+        with pytest.raises(ValueError, match="hang_s"):
+            FaultPlan.parse("step_hang:step=1,hang_s=0")
+        with pytest.raises(ValueError, match="lose"):
+            FaultPlan.parse("device_loss:step=1,lose=0")
+
+    def test_round_trip_property(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        step = st.integers(0, 500)
+        event = st.one_of(
+            st.builds(FaultEvent, kind=st.just("nan"), step=step),
+            st.builds(FaultEvent, kind=st.just("ckpt_crash"), step=step),
+            st.builds(FaultEvent, kind=st.just("kill"), step=step,
+                      lose=st.integers(1, 8)),
+            st.builds(FaultEvent, kind=st.just("device_loss"), step=step,
+                      lose=st.integers(1, 8)),
+            st.builds(FaultEvent, kind=st.just("decode_nan"), step=step,
+                      slot=st.integers(-1, 7)),
+            st.builds(FaultEvent, kind=st.just("step_hang"), step=step,
+                      hang_s=st.floats(0.5, 120.0).map(
+                          lambda x: round(x, 3))),
+            st.builds(FaultEvent, kind=st.just("pool_corrupt"), step=step,
+                      page=st.integers(-1, 63)),
+            st.builds(FaultEvent, kind=st.just("slowdown"), step=step,
+                      stage=st.integers(0, 7),
+                      factor=st.floats(1.0, 16.0).map(
+                          lambda x: round(x, 3)),
+                      duration=st.one_of(st.none(), st.integers(1, 50))),
+        )
+
+        @given(st.lists(event, max_size=6))
+        @settings(max_examples=60, deadline=None)
+        def round_trips(events):
+            plan = FaultPlan(events, seed=3)
+            assert FaultPlan.parse(plan.spec(), seed=3).events == plan.events
+
+        round_trips()
+
+    def test_take_is_one_shot_and_due_gated(self):
+        plan = FaultPlan.parse("decode_nan:step=5;decode_nan:step=9")
+        assert plan.take("decode_nan", 4) is None  # not due yet
+        ev = plan.take("decode_nan", 7)
+        assert ev is not None and ev.step == 5
+        assert plan.take("decode_nan", 7) is None  # consumed
+        assert plan.take("decode_nan", 9).step == 9
+        plan.reset()
+        assert plan.take("decode_nan", 5).step == 5
+
+    def test_devices_visible_consumes_and_stays_dead(self):
+        plan = FaultPlan.parse("device_loss:step=2,lose=1;kill:step=4,lose=2")
+        devs = list(range(8))
+        assert plan.devices_visible(devs, 1) == devs
+        assert len(plan.devices_visible(devs, 2)) == 7
+        # already consumed: the same step shows no FURTHER shrink
+        assert len(plan.devices_visible(devs, 3)) == 8
+        assert len(plan.devices_visible(devs, 4)) == 6
+
+    def test_choose_is_seeded_and_guarded(self):
+        a = FaultPlan.parse("pool_corrupt:step=1", seed=11)
+        b = FaultPlan.parse("pool_corrupt:step=1", seed=11)
+        opts = list(range(100))
+        assert [a.choose(opts) for _ in range(5)] == \
+               [b.choose(opts) for _ in range(5)]
+        with pytest.raises(ValueError, match="no options"):
+            a.choose([])
+
+
+# ---------------------------------------------------------------------------
+# allocator audit + quarantine (the corrupted-pool unit tests)
+# ---------------------------------------------------------------------------
+
+
+class TestPoolAudit:
+    def test_clean_pool_summary(self):
+        alloc = PageAllocator(8)
+        pages = alloc.alloc(3)
+        alloc.ref(pages[:1])
+        rep = alloc.audit({"a": pages, "b": pages[:1]})
+        assert rep == {"free": 5, "live": 3, "shared": 1, "quarantined": 0}
+
+    def test_detects_page_both_free_and_live(self):
+        alloc = PageAllocator(8)
+        pages = alloc.alloc(2)
+        alloc._free.append(pages[0])  # the pool_corrupt injection
+        with pytest.raises(PoolAuditError, match="both free and live"):
+            alloc.audit()
+
+    def test_detects_free_list_duplicates_and_leaks(self):
+        alloc = PageAllocator(4)
+        alloc._free.append(alloc._free[0])
+        with pytest.raises(PoolAuditError, match="duplicates"):
+            alloc.audit()
+        alloc = PageAllocator(4)
+        alloc._free.remove(2)
+        with pytest.raises(PoolAuditError, match="vanished"):
+            alloc.audit()
+
+    def test_detects_claim_mismatches(self):
+        alloc = PageAllocator(8)
+        pages = alloc.alloc(2)
+        # two owners both claiming an unshared page: double ownership
+        with pytest.raises(PoolAuditError, match="double ownership"):
+            alloc.audit({"slot0": pages, "slot1": [pages[0]]})
+        # a reference nobody claims: a leak in the making
+        alloc.ref(pages[1:])
+        with pytest.raises(PoolAuditError, match="leaked reference"):
+            alloc.audit({"slot0": pages})
+
+    def test_quarantine_accounting(self):
+        alloc = PageAllocator(8)
+        pages = alloc.alloc(3)
+        live, free_page = pages[0], 7
+        assert alloc.quarantine([live, free_page]) == 2
+        assert alloc.quarantine([live]) == 0  # idempotent
+        assert alloc.num_quarantined == 2
+        assert alloc.refcount(live) == 0  # a live page loses ALL refs
+        rep = alloc.audit({"a": pages[1:]})
+        assert rep["quarantined"] == 2
+        assert rep["free"] + rep["live"] + rep["quarantined"] == 8
+        # a quarantined page sneaking back into circulation is caught
+        alloc._free.append(free_page)
+        with pytest.raises(PoolAuditError, match="still circulating"):
+            alloc.audit()
+        with pytest.raises(ValueError, match="out of range"):
+            alloc.quarantine([99])
+
+
+class TestRadixDropAndProbe:
+    def test_drop_pages_purges_the_subtree(self):
+        alloc = PageAllocator(8)
+        cache = RadixPrefixCache(alloc, page_size=4)
+        pages = alloc.alloc(3)
+        assert cache.insert(list(range(12)), pages) == 3
+        alloc.release(pages)  # tree is now sole owner
+        alloc.audit({"radix": cache.pages()})
+        # dropping the MIDDLE page must take its descendant too: the
+        # third page's prefix runs through the dropped page's rows
+        assert cache.drop_pages({pages[1]}) == 2
+        assert cache.pages() == [pages[0]]
+        alloc.audit({"radix": cache.pages()})
+        assert alloc.num_free == 8 - 1
+
+    def test_find_nonfinite_pages(self):
+        z = jnp.zeros((2, 5, 4, 3), jnp.float32)
+        blocks = [
+            {"k": z.at[0, 2, 1, 0].set(jnp.nan), "v": z},
+            {"k": z, "v": z.at[1, 4].set(jnp.inf)},
+        ]
+        assert find_nonfinite_pages(blocks) == [2, 4]
+        # int8 codes cannot hold a NaN — their f32 scales can
+        codes = jnp.zeros((2, 5, 4), jnp.int8)
+        scale = jnp.zeros((1, 5, 4), jnp.float32)
+        assert find_nonfinite_pages(
+            [{"codes": codes, "scale": scale.at[0, 3, 0].set(jnp.nan)}]
+        ) == [3]
+
+
+# ---------------------------------------------------------------------------
+# engine fault surface
+# ---------------------------------------------------------------------------
+
+
+class TestEngineFaultSurface:
+    def test_cancel_everywhere_returns_pages(self):
+        cfg, params = _cfg_params()
+        rng = np.random.default_rng(0)
+        eng = ServingEngine(params, cfg, max_slots=1, max_len=128,
+                            page_size=8, prefill_chunk=8)
+        free0 = eng.allocator.num_free
+        a = eng.submit(rng.integers(0, cfg.vocab, (9,), dtype=np.int32), 6)
+        b = eng.submit(rng.integers(0, cfg.vocab, (7,), dtype=np.int32), 6)
+        eng.step()  # a decoding, b queued behind the single slot
+        assert eng.cancel(b) and b.cancelled and b.t_done is not None
+        eng.step()
+        assert eng.cancel(a) and a.cancelled
+        assert eng.allocator.num_free == free0
+        assert (eng.block_tables == -1).all()
+        eng.audit()
+        assert not eng.cancel(a)  # unknown here now
+        assert {r.rid for r in eng.take_done()} == {a.rid, b.rid}
+        assert eng.pending == 0 and eng.active == 0
+
+    def test_requeue_guards(self):
+        cfg, params = _cfg_params()
+        rng = np.random.default_rng(1)
+        eng = ServingEngine(params, cfg, **ENGINE_KW)
+        done = eng.submit(rng.integers(0, cfg.vocab, (6,), dtype=np.int32), 2)
+        eng.run()
+        with pytest.raises(ValueError, match="already done"):
+            eng.requeue(done)
+        gone = eng.submit(rng.integers(0, cfg.vocab, (6,), dtype=np.int32), 2)
+        eng.cancel(gone)
+        with pytest.raises(ValueError, match="already cancelled"):
+            eng.requeue(gone)
+        big = eng.submit(rng.integers(0, cfg.vocab, (40,), dtype=np.int32),
+                         40)
+        small_pool = ServingEngine(params, cfg, max_slots=1, max_len=128,
+                                   page_size=8, num_pages=4, prefill_chunk=8)
+        with pytest.raises(ValueError, match="pages"):
+            small_pool.requeue(big)
+
+    def test_quarantine_slot_retires_the_lane(self):
+        cfg, params = _cfg_params()
+        rng = np.random.default_rng(2)
+        eng = ServingEngine(params, cfg, **ENGINE_KW)
+        r = eng.submit(rng.integers(0, cfg.vocab, (9,), dtype=np.int32), 6)
+        eng.step()
+        sid = next(i for i, s in enumerate(eng.slots) if s.req is r)
+        with pytest.raises(ValueError, match="tear it down"):
+            eng.quarantine_slot(sid)
+        eng.cancel(r)
+        eng.quarantine_slot(sid)
+        assert eng.slots[sid].quarantined
+        # admission skips the quarantined lane; work still drains
+        p = rng.integers(0, cfg.vocab, (7,), dtype=np.int32)
+        r2 = eng.submit(p, 3)
+        r3 = eng.submit(p[:5], 3)
+        finished = {q.rid for q in eng.run() if not q.cancelled}
+        assert {r2.rid, r3.rid} <= finished
+        assert eng.slots[sid].req is None
+        eng.audit()
+
+    def test_debug_audit_catches_live_corruption(self):
+        cfg, params = _cfg_params()
+        rng = np.random.default_rng(3)
+        eng = ServingEngine(params, cfg, **ENGINE_KW)
+        eng.submit(rng.integers(0, cfg.vocab, (9,), dtype=np.int32), 8)
+        eng.step(debug_audit=True)  # clean step passes
+        page = next(iter(eng.allocator._refs))
+        eng.allocator._free.append(page)
+        with pytest.raises(PoolAuditError):
+            eng.step(debug_audit=True)
+
+
+class TestMonotonicClock:
+    def test_every_timestamp_comes_from_the_module_clock(self, monkeypatch):
+        """Satellite regression: the engine's latency accounting must go
+        through ``engine._now`` (monotonic) everywhere — a fake clock far
+        above any real ``time.monotonic()`` value proves no call site
+        still reads a different clock, and strict fake ticks prove every
+        derived latency stays non-negative."""
+        cfg, params = _cfg_params()
+        t0 = 1e9  # real monotonic (host uptime) can never reach this
+
+        class FakeClock:
+            t = t0
+
+            def __call__(self):
+                FakeClock.t += 1e-4
+                return FakeClock.t
+
+        monkeypatch.setattr(engine_mod, "_now", FakeClock())
+        rng = np.random.default_rng(4)
+        eng = ServingEngine(params, cfg, **ENGINE_KW)
+        reqs = [eng.submit(rng.integers(0, cfg.vocab, (n,), dtype=np.int32),
+                           m) for n, m in [(9, 5), (13, 4)]]
+        done = eng.run()
+        assert len(done) == len(reqs)
+        for r in done:
+            stamps = [r.t_submit, r.t_admit, r.t_first, *r.token_times,
+                      r.t_done]
+            assert all(s >= t0 for s in stamps), "a timestamp bypassed _now"
+            assert all(b >= a for a, b in zip(stamps, stamps[1:]))
+        stats = latency_stats(done)
+        assert all(v >= 0.0 for v in stats.values()
+                   if isinstance(v, (int, float)))
+
+
+# ---------------------------------------------------------------------------
+# the serving supervisor
+# ---------------------------------------------------------------------------
+
+
+class TestServeSupervisor:
+    def test_clean_run_is_invisible(self):
+        cfg, params = _cfg_params()
+        (p, m), = _reqs(cfg, 5, [(9, 5)])
+        sup = ServeSupervisor(params, cfg, engine_kw=ENGINE_KW)
+        sup.submit(p, m)
+        done = sup.run()
+        assert list(done[0].tokens) == list(_oracle(params, cfg, p, m))
+        st = sup.stats()
+        assert sup.events == [] and st["recoveries"] == 0
+        assert st["health_events"] == 0 and not sup.degraded
+        _leak_check(sup.engine)
+
+    def test_submit_guards_and_event_kinds(self):
+        cfg, params = _cfg_params()
+        (p, m), = _reqs(cfg, 5, [(9, 5)])
+        sup = ServeSupervisor(params, cfg, engine_kw=ENGINE_KW)
+        with pytest.raises(ValueError, match="deadline_ms"):
+            sup.submit(p, m, deadline_ms=0)
+        with pytest.raises(ValueError, match="unknown serve event"):
+            ServeEvent("oops", 0)
+
+    def test_decode_nan_quarantines_and_resumes_bitwise(self):
+        """The tentpole property in miniature: NaN-poisoned pages are
+        found by the probe, purged from the radix index, quarantined
+        with the victim's lane, and the victim resumes from its last
+        clean token — every finished stream bitwise the fault-free
+        run's."""
+        cfg, params = _cfg_params()
+        reqs = _reqs(cfg, 6, [(9, 12), (13, 10), (8, 8)])
+        base = _baseline(params, cfg, reqs, ENGINE_KW)
+        sup = ServeSupervisor(params, cfg, engine_kw=ENGINE_KW,
+                              fault_plan=FaultPlan.parse("decode_nan:step=3"))
+        for p, m in reqs:
+            sup.submit(p, m)
+        done = sup.run()
+        assert [r.rid for r in done] == [0, 1, 2]
+        assert not any(r.cancelled for r in done)
+        for r in done:
+            assert list(r.tokens) == base[r.rid], r.rid
+        st = sup.stats()
+        assert st["events"] == {"quarantine": 1}
+        assert sup.recoveries == 1 and not sup.degraded
+        ev = sup.events[0]
+        assert ev.detail["newly_quarantined"] >= 1
+        assert ev.detail["rids"] and ev.recovery_s >= 0.0
+        assert any(s.quarantined for s in sup.engine.slots)
+        assert sup.engine.allocator.num_quarantined >= 1
+        _leak_check(sup.engine)
+
+    def test_device_loss_rebuilds_on_survivors_bitwise(self):
+        cfg, params = _cfg_params()
+        reqs = _reqs(cfg, 7, [(9, 10), (13, 8), (8, 6)])
+        base = _baseline(params, cfg, reqs, ENGINE_KW)
+        sup = ServeSupervisor(
+            params, cfg, engine_kw=ENGINE_KW,
+            fault_plan=FaultPlan.parse("device_loss:step=2,lose=1"),
+            devices=[0, 1, 2, 3])
+        for p, m in reqs:
+            sup.submit(p, m)
+        done = sup.run()
+        assert not any(r.cancelled for r in done)
+        for r in done:
+            assert list(r.tokens) == base[r.rid], r.rid
+        st = sup.stats()
+        assert st["devices"] == 3 and st["events"] == {"rebuild": 1}
+        # the lost board took its HBM slice: pool scaled 32 -> 24
+        assert sup.engine.num_pages == 24
+        ev = sup.events[0]
+        assert ev.detail["kind"] == "device_loss"
+        assert ev.detail["salvaged"] >= 1
+        assert st["health_events"] >= 1  # the monitor saw the shrink
+        _leak_check(sup.engine)
+
+    def test_pool_corrupt_is_caught_by_the_audit(self):
+        """Double ownership has no NaN and raises no exception — only
+        the audit cross-check sees it; recovery rolls every request back
+        to its last clean token and rebuilds."""
+        cfg, params = _cfg_params()
+        kw = dict(ENGINE_KW, prefix_cache=False)
+        reqs = _reqs(cfg, 8, [(9, 10), (13, 8)])
+        base = _baseline(params, cfg, reqs, kw)
+        sup = ServeSupervisor(
+            params, cfg, engine_kw=kw,
+            fault_plan=FaultPlan.parse("pool_corrupt:step=2", seed=1))
+        for p, m in reqs:
+            sup.submit(p, m)
+        done = sup.run()
+        assert not any(r.cancelled for r in done)
+        for r in done:
+            assert list(r.tokens) == base[r.rid], r.rid
+        ev = next(e for e in sup.events if e.kind == "rebuild")
+        assert ev.detail["kind"] == "pool_corrupt"
+        _leak_check(sup.engine)
+
+    def test_step_hang_trips_the_watchdog(self):
+        """A wedged step never beats: the poll at the virtual post-hang
+        clock must declare the miss (EWMA-relative, no tuned timeout)
+        and the rebuild resumes everyone bitwise."""
+        cfg, params = _cfg_params()
+        reqs = _reqs(cfg, 9, [(9, 20), (13, 18)])
+        base = _baseline(params, cfg, reqs, ENGINE_KW)
+        sup = ServeSupervisor(
+            params, cfg, engine_kw=ENGINE_KW,
+            fault_plan=FaultPlan.parse("step_hang:step=6,hang_s=60"))
+        for p, m in reqs:
+            sup.submit(p, m)
+        done = sup.run()
+        assert not any(r.cancelled for r in done)
+        for r in done:
+            assert list(r.tokens) == base[r.rid], r.rid
+        wd = [e for e in sup.events if e.kind == "watchdog"]
+        assert len(wd) == 1 and wd[0].detail["detected"]
+        rb = next(e for e in sup.events if e.kind == "rebuild")
+        assert rb.detail["kind"] == "step_hang"
+        _leak_check(sup.engine)
+
+    def test_deadline_cancels_within_one_step(self):
+        cfg, params = _cfg_params()
+        rng = np.random.default_rng(10)
+        pv = rng.integers(0, cfg.vocab, (9,), dtype=np.int32)
+        pw = rng.integers(0, cfg.vocab, (13,), dtype=np.int32)
+        sup = ServeSupervisor(params, cfg, engine_kw=ENGINE_KW)
+        v = sup.submit(pv, 110, deadline_ms=1.0)
+        w = sup.submit(pw, 6)
+        done = sup.run()
+        assert v.cancelled and v.t_done is not None
+        cd = [e for e in sup.events if e.kind == "cancel_deadline"]
+        assert len(cd) == 1 and cd[0].detail["rid"] == v.rid
+        assert cd[0].detail["expired_since_last_check"], (
+            "enforcement skipped a step")
+        assert cd[0].detail["late_s"] >= 0.0
+        wr = next(r for r in done if r.rid == w.rid)
+        assert wr.done and not wr.cancelled
+        assert list(wr.tokens) == list(_oracle(params, cfg, pw, 6))
+        _leak_check(sup.engine)
+
+    def test_shed_when_the_shrunken_pool_cannot_back_a_request(self):
+        cfg, params = _cfg_params()
+        rng = np.random.default_rng(11)
+        p_small = rng.integers(0, cfg.vocab, (8,), dtype=np.int32)
+        p_big = rng.integers(0, cfg.vocab, (40,), dtype=np.int32)
+        sup = ServeSupervisor(
+            params, cfg, engine_kw=dict(ENGINE_KW, num_pages=16),
+            fault_plan=FaultPlan.parse("device_loss:step=0,lose=2"),
+            devices=[0, 1, 2, 3])
+        small = sup.submit(p_small, 4)
+        big = sup.submit(p_big, 40)  # needs 10 pages; survivors have 8
+        done = sup.run()
+        assert big.cancelled
+        shed = [e for e in sup.events if e.kind == "shed"]
+        assert shed and big.rid in shed[0].detail["rids"]
+        assert sup.engine.num_pages == 8
+        sr = next(r for r in done if r.rid == small.rid)
+        assert sr.done and list(sr.tokens) == list(
+            _oracle(params, cfg, p_small, 4))
+        _leak_check(sup.engine)
+
+    def test_degrade_flips_dispatch_and_restores(self):
+        from repro.models import layers
+
+        cfg, params = _cfg_params()
+        # read the current dispatchers without disturbing them
+        attn0 = layers.set_attention_impl("jnp")
+        layers.set_attention_impl(attn0)
+        gemm0 = layers.set_gemm_impl("jnp")
+        layers.set_gemm_impl(gemm0)
+        reqs = _reqs(cfg, 12, [(9, 10), (13, 8)])
+        sup = ServeSupervisor(
+            params, cfg, engine_kw=ENGINE_KW,
+            fault_plan=FaultPlan.parse("decode_nan:step=3"),
+            degrade_after=1)
+        try:
+            for p, m in reqs:
+                sup.submit(p, m)
+            done = sup.run()
+            assert sup.degraded
+            deg = next(e for e in sup.events if e.kind == "degrade")
+            assert deg.detail == {"faults": 1, "attention": "jnp",
+                                  "gemm": "jnp"}
+            # the flip is live: the current dispatchers read back jnp
+            assert layers.set_attention_impl("jnp") == "jnp"
+            assert layers.set_gemm_impl("jnp") == "jnp"
+            assert len(done) == len(reqs)
+            assert not any(r.cancelled for r in done)
+            _leak_check(sup.engine)
+        finally:
+            sup.restore_dispatchers()
+        assert layers.set_attention_impl(attn0) == attn0
+        assert layers.set_gemm_impl(gemm0) == gemm0
