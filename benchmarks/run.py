@@ -13,11 +13,16 @@ whole bench family), and a pattern matching nothing fails fast.
 ``--only kernel_bench,attn_bench`` and, under 4 fake devices,
 ``--only pipeline_bench``, ``--only serving_bench``,
 ``--only quant_bench``, ``--only spec_bench``, ``--only ft_bench``,
-``--only slo_bench`` and ``--only serve_ft_bench`` — their rows go to
+``--only slo_bench``, ``--only serve_ft_bench``, ``--only calibrate``
+and ``--only autotune_bench`` — their rows go to
 ``BENCH_serving.json`` / ``BENCH_pipeline.json`` / ``BENCH_quant.json``
 / ``BENCH_spec.json`` / ``BENCH_ft.json`` / ``BENCH_slo.json`` /
-``BENCH_serve_ft.json``.  A failed module names itself in the nonzero
-exit (``SystemExit("benchmark gate failure in: ...")``).
+``BENCH_serve_ft.json`` / ``BENCH_calibrate.json`` /
+``BENCH_autotune.json``.  Every emitted row carries provenance fields
+(device_kind, backend, jax_version, seed) so calibration can key
+profiles to the hardware that produced them.  A failed module names
+itself in the nonzero exit
+(``SystemExit("benchmark gate failure in: ...")``).
 """
 
 from __future__ import annotations
@@ -37,11 +42,31 @@ SPEC_JSON = "BENCH_spec.json"
 FT_JSON = "BENCH_ft.json"
 SLO_JSON = "BENCH_slo.json"
 SERVE_FT_JSON = "BENCH_serve_ft.json"
+CALIBRATE_JSON = "BENCH_calibrate.json"
+AUTOTUNE_JSON = "BENCH_autotune.json"
 #: modules whose rows are archived separately from the kernel JSON
 _SPLIT_JSON = {"pipeline_bench": PIPELINE_JSON, "serving_bench": SERVING_JSON,
                "quant_bench": QUANT_JSON, "spec_bench": SPEC_JSON,
                "ft_bench": FT_JSON, "slo_bench": SLO_JSON,
-               "serve_ft_bench": SERVE_FT_JSON}
+               "serve_ft_bench": SERVE_FT_JSON,
+               "calibrate": CALIBRATE_JSON,
+               "autotune_bench": AUTOTUNE_JSON}
+
+#: base RNG seed the benches derive their keys/traces from — recorded
+#: per row so profiles key to the run that produced them
+BENCH_SEED = 0
+
+
+def _provenance() -> dict:
+    """Hardware/runtime identity stamped on every emitted BENCH row, so
+    calibration (core.cost_model.RuntimeCostModel) can key profiles to
+    the device that produced them."""
+    import jax
+
+    return {"device_kind": jax.devices()[0].device_kind,
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "seed": BENCH_SEED}
 
 
 def _capture(mod_main):
@@ -66,13 +91,15 @@ def _capture(mod_main):
 
 def _write_json(csv_rows: list[str], path: str = BENCH_JSON) -> None:
     records = []
+    prov = _provenance()
     for row in csv_rows:
         name, us, derived = row.split(",", 2)
         try:
             us_val: float | None = float(us)
         except ValueError:
             us_val = None
-        records.append({"name": name, "us_per_call": us_val, "derived": derived})
+        records.append({"name": name, "us_per_call": us_val,
+                        "derived": derived, **prov})
     with open(path, "w") as f:
         json.dump(records, f, indent=1)
     print(f"\nwrote {len(records)} rows to {path}")
@@ -91,6 +118,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (
         attn_bench,
+        autotune_bench,
+        calibrate,
         discussion_reconfig,
         fig3_zynq_cluster,
         fig4_ultrascale_cluster,
@@ -121,6 +150,8 @@ def main(argv=None) -> None:
         ("spec_bench", spec_bench.main),
         ("ft_bench", ft_bench.main),
         ("serve_ft_bench", serve_ft_bench.main),
+        ("calibrate", calibrate.main),
+        ("autotune_bench", autotune_bench.main),
         ("strategy_tpu", strategy_tpu.main),
         ("power", power.main),
     ]

@@ -297,6 +297,236 @@ TPU_V5E = TPUModel()
 
 
 # ---------------------------------------------------------------------------
+# RuntimeCostModel — fitted to the measured JAX/Pallas runtime
+# ---------------------------------------------------------------------------
+
+#: bump when feature definitions change — persisted models refuse to load
+RUNTIME_MODEL_SCHEMA = 1
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-int(a) // int(b))
+
+
+def flash_tile_work(
+    s: int, t: int, *, block_q: int, block_k: int,
+    q_offset: int = 0, kv_len: int | None = None,
+    bidirectional: bool = False,
+) -> tuple[int, int]:
+    """(executed, total) KV-tile counts for one (batch, head) grid slice —
+    the pure-python twin of ``kernels.flash_attention.flash_tile_counts``
+    (no window support; the measurement grid is window-free), so the cost
+    model can featurize without importing jax."""
+    qc, kc = min(block_q, s), min(block_k, t)
+    nq, nk = _ceil_div(s, qc), _ceil_div(t, kc)
+    kvlen = min(t if kv_len is None else int(kv_len), t)
+    executed = 0
+    for iq in range(nq):
+        if bidirectional:
+            last = (kvlen - 1) // kc
+        else:
+            q_hi = q_offset + iq * qc + qc - 1
+            last = min(q_hi, kvlen - 1) // kc
+        executed += max(0, min(last, nk - 1) + 1)
+    return executed, nq * nk
+
+
+def decode_partition_work(t: int, fill: int, *, block_k: int) -> tuple[int, int]:
+    """(live, total) split-KV partitions for a dense decode over a padded
+    T-buffer with ``fill`` live positions."""
+    kc = min(block_k, t)
+    return _ceil_div(max(min(fill, t), 1), kc), _ceil_div(t, kc)
+
+
+#: feature names per kind (documentation; the fit is name-agnostic)
+RUNTIME_FEATURES = {
+    "flash_prefill": ("tile_macs", "tiles", "grid_cells", "const"),
+    "decode": ("live_rows", "live_parts", "total_parts", "buf_rows", "const"),
+    "paged_decode": ("live_rows", "live_pages", "table_rows", "const"),
+    "gemm_int8": ("padded_macs", "tiles", "const"),
+    "prefill_chunk": ("tokens", "calls", "attn_work", "const"),
+}
+
+
+def runtime_features(kind: str, p: dict) -> list[float]:
+    """Monotone nonnegative features for one measured point.
+
+    Every feature is nondecreasing in the work-size parameters (tokens,
+    fill, pages, matrix dims), so a nonnegative-weight fit yields a
+    monotone predictor by construction — the planner can never be told
+    that more work is cheaper.
+    """
+    batch = int(p.get("batch", 1))
+    heads = int(p.get("heads", 1))
+    d = int(p.get("head_dim", 64))
+    if kind == "flash_prefill":
+        s = int(p["seq"])
+        t = int(p.get("kv", s))
+        bq, bk = int(p["block_q"]), int(p["block_k"])
+        e, n = flash_tile_work(s, t, block_q=bq, block_k=bk,
+                               kv_len=p.get("kv_len"))
+        m = batch * heads
+        area = min(bq, s) * min(bk, t)
+        return [m * e * area * d, m * e, m * n, 1.0]
+    if kind == "decode":
+        t, fill = int(p["buf"]), int(p["fill"])
+        bk = int(p.get("block_k", t))
+        live, total = decode_partition_work(t, fill, block_k=bk)
+        m = batch * heads
+        kc = min(bk, t)
+        return [m * live * kc * d, m * live, m * total, m * t * d, 1.0]
+    if kind == "paged_decode":
+        fill, pg = int(p["fill"]), int(p["page_size"])
+        max_pp = int(p.get("max_pp", _ceil_div(int(p.get("max_len", fill)), pg)))
+        live = _ceil_div(max(fill, 1), pg)
+        m = batch * heads
+        return [m * live * pg * d, batch * live, m * max_pp * pg * d, 1.0]
+    if kind == "gemm_int8":
+        mm, nn, kk = int(p["m"]), int(p["n"]), int(p["k"])
+        bm = int(p.get("block_m", 128))
+        bn = int(p.get("block_n", 128))
+        bk = int(p.get("block_k", 128))
+        tm, tn, tk = _ceil_div(mm, bm), _ceil_div(nn, bn), _ceil_div(kk, bk)
+        return [float(tm * bm) * (tn * bn) * (tk * bk), float(tm * tn * tk), 1.0]
+    if kind == "prefill_chunk":
+        tokens, chunk = int(p["tokens"]), int(p["chunk"])
+        calls = _ceil_div(tokens, chunk)
+        # each chunk pass attends its chunk against the growing cache;
+        # sum over calls of chunk * cache_len ~ tokens * chunk-quadratic
+        return [batch * float(tokens), float(calls),
+                batch * float(tokens) * min(chunk, tokens), 1.0]
+    raise ValueError(f"unknown runtime cost kind {kind!r} "
+                     f"(known: {sorted(RUNTIME_FEATURES)})")
+
+
+def _nnls(rows: list[list[float]], ys: list[float],
+          iters: int = 2000) -> list[float]:
+    """Nonnegative least squares on relative error: rows are scaled by
+    1/y so the fit minimizes sum((pred/y - 1)^2) — a MAPE surrogate.
+    Lee–Seung multiplicative updates; X >= 0 and y >= 0 guarantee the
+    iterates stay nonnegative."""
+    import numpy as np
+
+    X = np.asarray(rows, float)
+    y = np.asarray(ys, float)
+    w_rel = 1.0 / np.maximum(y, 1e-12)
+    Xs = X * w_rel[:, None]
+    ys_ = np.ones_like(y)
+    norms = np.linalg.norm(Xs, axis=0)
+    norms[norms == 0] = 1.0
+    Xs = Xs / norms
+    h = Xs.T @ ys_
+    G = Xs.T @ Xs
+    w = np.full(Xs.shape[1], 1.0 / max(Xs.shape[1], 1))
+    for _ in range(iters):
+        denom = G @ w
+        w = w * h / np.maximum(denom, 1e-30)
+    return list(w / norms)
+
+
+class RuntimeCostModel:
+    """Per-device-kind predictor of measured JAX/Pallas runtime costs.
+
+    The VTA :class:`BoardModel` above predicts the paper's FPGA boards
+    from datasheet physics plus six calibrated scalars; this is the same
+    discipline pointed at our own runtime: ``core.measure`` times the
+    real hot paths, :meth:`fit` solves a nonnegative least-squares fit of
+    per-kind monotone features (executed flash tiles, live split-KV
+    partitions, live pages, padded GEMM MACs, prefill chunk calls) to the
+    measured seconds, and :meth:`predict` answers the planner's what-if
+    questions (``core.autotune.tune_runtime`` / ``choose_pattern``) about
+    configurations that were never timed.
+
+    Nonnegative weights over monotone features make every prediction
+    monotone in the work size — more tokens/pages/MACs are never
+    predicted cheaper.  BENCH_*.json rows ingest as exact lookups
+    (kind ``"bench"``): measured end-to-end numbers beat any fit.
+    """
+
+    def __init__(self, device: str = "unknown",
+                 coef: dict | None = None,
+                 stats: dict | None = None,
+                 bench: dict | None = None):
+        self.device = device
+        self.coef = {k: list(v) for k, v in (coef or {}).items()}
+        self.stats = dict(stats or {})
+        self.bench = dict(bench or {})
+
+    # -- fitting ------------------------------------------------------------
+
+    @classmethod
+    def fit(cls, profile, *, device: str | None = None) -> "RuntimeCostModel":
+        """Fit one weight vector per kind to ``profile`` — either a
+        ``core.measure`` profile dict or a bare entry list
+        (``[{"kind", "params", "t_s"}, ...]``)."""
+        if isinstance(profile, dict):
+            entries = profile.get("entries", [])
+            device = device or profile.get("device", "unknown")
+        else:
+            entries = list(profile)
+        by_kind: dict[str, list] = {}
+        for e in entries:
+            by_kind.setdefault(e["kind"], []).append(e)
+        coef, stats = {}, {}
+        for kind, es in by_kind.items():
+            rows = [runtime_features(kind, e["params"]) for e in es]
+            ys = [float(e["t_s"]) for e in es]
+            coef[kind] = _nnls(rows, ys)
+            model = cls(device or "unknown", coef)
+            stats[kind] = {"n": len(es), "mape": model.mape(es)}
+        return cls(device or "unknown", coef, stats)
+
+    def ingest_bench(self, records, source: str = "") -> int:
+        """Index BENCH_*.json rows (``[{"name", "us_per_call", ...}]``)
+        as exact lookups: ``predict("bench", name=...)``."""
+        n = 0
+        for r in records:
+            us = r.get("us_per_call")
+            if r.get("name") and us is not None:
+                self.bench[r["name"]] = {"t_s": float(us) * 1e-6,
+                                         "derived": r.get("derived", ""),
+                                         "source": source}
+                n += 1
+        return n
+
+    # -- prediction ---------------------------------------------------------
+
+    def predict(self, kind: str, **params) -> float:
+        """Predicted seconds for one call of ``kind`` at ``params``."""
+        if kind == "bench":
+            return self.bench[params["name"]]["t_s"]
+        if kind not in self.coef:
+            raise KeyError(f"RuntimeCostModel has no fit for {kind!r} "
+                           f"(fitted: {sorted(self.coef)})")
+        feats = runtime_features(kind, params)
+        return float(sum(w * f for w, f in zip(self.coef[kind], feats)))
+
+    def mape(self, entries) -> float:
+        """Mean absolute percentage error against measured entries."""
+        errs = []
+        for e in entries:
+            got = self.predict(e["kind"], **e["params"])
+            want = float(e["t_s"])
+            errs.append(abs(got - want) / max(want, 1e-12))
+        return sum(errs) / max(len(errs), 1)
+
+    # -- persistence --------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {"schema": RUNTIME_MODEL_SCHEMA, "device": self.device,
+                "coef": self.coef, "stats": self.stats, "bench": self.bench}
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "RuntimeCostModel":
+        if obj.get("schema") != RUNTIME_MODEL_SCHEMA:
+            raise ValueError(
+                f"stale RuntimeCostModel schema {obj.get('schema')!r} "
+                f"(current {RUNTIME_MODEL_SCHEMA}); re-run core.measure")
+        return cls(obj.get("device", "unknown"), obj.get("coef"),
+                   obj.get("stats"), obj.get("bench"))
+
+
+# ---------------------------------------------------------------------------
 # Model-FLOPs helpers (roofline 'useful compute' numerator)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,299 @@
+"""Micro-benchmark harness for the JAX/Pallas runtime hot paths.
+
+``benchmarks/calibrate.py`` fits the FPGA board model to the paper's
+published numbers; this module is the same "structure is physics,
+coefficients are measurement" pass pointed at our own runtime.  Each
+``measure_*`` function times one hot path — flash prefill across
+``(seq, block_q, block_k)``, dense split-KV decode across
+``(fill, block_k)``, ``paged_decode_attention`` across
+``(fill, page_size)``, the int8 VTA GEMM across block presets, and the
+engine's prefill-chunk buckets — with compile-excluded warmup and
+``block_until_ready`` median-of-k timing, and returns profile entries
+
+    {"kind": <cost kind>, "params": {...}, "t_s": <median seconds>}
+
+that :meth:`repro.core.cost_model.RuntimeCostModel.fit` consumes and
+``core.autotune.tune_runtime`` searches over.  ``collect_profile``
+wraps entries with the provenance the fit is keyed by (device
+signature + config hash): a profile measured under one backend/impl
+pair must never parameterize another.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+#: profile schema — bump on incompatible entry changes
+PROFILE_SCHEMA = 1
+
+#: default shapes shared by the measurement grids and ``choose_pattern``
+#: (aux params must match between profile and prediction)
+DEFAULT_AUX = dict(batch=1, heads=4, kv_heads=2, head_dim=64)
+
+
+def device_signature() -> str:
+    """Identity the profile/tuning-table is keyed by: backend, device
+    kind, and the active attention/GEMM dispatch — tuned Pallas blocks
+    mean nothing to the jnp reference and vice versa."""
+    from repro.models import layers
+
+    dev = jax.devices()[0].device_kind.replace(" ", "_")
+    return (f"{jax.default_backend()}/{dev}/"
+            f"attn={layers.attention_impl()},gemm={layers.gemm_impl()}")
+
+
+def config_hash(cfg) -> str:
+    """Stable short hash of a model config (profiles carry it so serving
+    entries only parameterize the config they timed)."""
+    if dataclasses.is_dataclass(cfg):
+        src = json.dumps(
+            {k: repr(v) for k, v in dataclasses.asdict(cfg).items()},
+            sort_keys=True)
+    else:
+        src = repr(cfg)
+    return hashlib.md5(src.encode()).hexdigest()[:12]
+
+
+def time_fn(fn, *args, warmup: int = 2, reps: int = 5) -> float:
+    """Median-of-``reps`` wall seconds for ``fn(*args)``, after
+    ``warmup`` discarded calls (compile + cache effects), every call
+    fenced with ``block_until_ready`` so async dispatch can't lie."""
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _entry(kind: str, params: dict, t_s: float) -> dict:
+    return {"kind": kind, "params": dict(params), "t_s": float(t_s)}
+
+
+def _aux(overrides: dict) -> dict:
+    out = dict(DEFAULT_AUX)
+    out.update({k: v for k, v in overrides.items() if v is not None})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-hot-path measurement grids
+# ---------------------------------------------------------------------------
+
+
+def measure_flash_prefill(*, seqs=(256,), blocks=((64, 64), (128, 128)),
+                          batch=None, heads=None, kv_heads=None,
+                          head_dim=None, warmup=2, reps=5) -> list[dict]:
+    """Time ``layers.flash_attend`` (whatever impl is dispatched) across
+    a (seq, block_q, block_k) grid."""
+    from repro.models import layers
+
+    aux = _aux(dict(batch=batch, heads=heads, kv_heads=kv_heads,
+                    head_dim=head_dim))
+    b, h, hkv, d = (aux["batch"], aux["heads"], aux["kv_heads"],
+                    aux["head_dim"])
+    key = jax.random.PRNGKey(0)
+    out = []
+    for s in seqs:
+        kq, kk, kv = jax.random.split(jax.random.fold_in(key, s), 3)
+        q = jax.random.normal(kq, (b, s, h, d), jnp.float32)
+        k = jax.random.normal(kk, (b, s, hkv, d), jnp.float32)
+        v = jax.random.normal(kv, (b, s, hkv, d), jnp.float32)
+        for bq, bk in blocks:
+            fn = jax.jit(functools.partial(
+                layers.flash_attend, block_q=bq, block_k=bk))
+            t = time_fn(fn, q, k, v, warmup=warmup, reps=reps)
+            out.append(_entry("flash_prefill",
+                              dict(seq=s, block_q=bq, block_k=bk, **aux), t))
+    return out
+
+
+def measure_decode(*, buf=1024, fills=(256, 1024), block_ks=(256, 512, 1024),
+                   batch=None, heads=None, kv_heads=None, head_dim=None,
+                   warmup=2, reps=5) -> list[dict]:
+    """Time ``layers.decode_attend`` (dense split-KV over a padded
+    T=``buf`` cache) across (fill, block_k)."""
+    from repro.models import layers
+
+    aux = _aux(dict(batch=batch, heads=heads, kv_heads=kv_heads,
+                    head_dim=head_dim))
+    b, h, hkv, d = (aux["batch"], aux["heads"], aux["kv_heads"],
+                    aux["head_dim"])
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(kq, (b, 1, h, d), jnp.float32)
+    k = jax.random.normal(kk, (b, buf, hkv, d), jnp.float32)
+    v = jax.random.normal(kv, (b, buf, hkv, d), jnp.float32)
+    out = []
+    for fill in fills:
+        for bk in block_ks:
+            fn = jax.jit(lambda q, k, v, kl, bk=bk: layers.decode_attend(
+                q, k, v, kv_len=kl, block_k=bk))
+            t = time_fn(fn, q, k, v, jnp.int32(fill), warmup=warmup,
+                        reps=reps)
+            out.append(_entry("decode",
+                              dict(buf=buf, fill=fill, block_k=bk, **aux), t))
+    return out
+
+
+def measure_paged_decode(*, max_len=512, fills=(64, 256), page_sizes=(8, 16),
+                         batch=None, heads=None, kv_heads=None,
+                         head_dim=None, warmup=2, reps=5) -> list[dict]:
+    """Time ``layers.paged_decode_attend`` across (fill, page_size) with
+    a fully-backed pool (slot s owns pages [s*max_pp, (s+1)*max_pp))."""
+    from repro.models import layers
+
+    aux = _aux(dict(batch=batch, heads=heads, kv_heads=kv_heads,
+                    head_dim=head_dim))
+    b, h, hkv, d = (aux["batch"], aux["heads"], aux["kv_heads"],
+                    aux["head_dim"])
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(kq, (b, 1, h, d), jnp.float32)
+    out = []
+    for pg in page_sizes:
+        max_pp = -(-max_len // pg)
+        kp = jax.random.normal(kk, (hkv, b * max_pp, pg, d), jnp.float32)
+        vp = jax.random.normal(kv, (hkv, b * max_pp, pg, d), jnp.float32)
+        bt = jnp.arange(b * max_pp, dtype=jnp.int32).reshape(b, max_pp)
+        for fill in fills:
+            lens = jnp.full((b,), min(fill, max_len), jnp.int32)
+            fn = jax.jit(layers.paged_decode_attend)
+            t = time_fn(fn, q, kp, vp, bt, lens, warmup=warmup, reps=reps)
+            out.append(_entry(
+                "paged_decode",
+                dict(fill=min(fill, max_len), page_size=pg, max_pp=max_pp,
+                     max_len=max_len, **aux), t))
+    return out
+
+
+def measure_gemm(*, m=256, n=256, k=256, block_sets=None,
+                 warmup=2, reps=5) -> list[dict]:
+    """Time the int8 VTA GEMM (``kernels.ops.matmul_int8``) across block
+    presets/overrides.  Off-TPU this is the interpret-mode kernel — the
+    path the forced-pallas tests and benches actually run."""
+    from repro.kernels.ops import BLOCK_PRESETS, matmul_int8
+    from repro.models.layers import _pallas_interpret
+
+    if block_sets is None:
+        block_sets = list(BLOCK_PRESETS.values())
+    ka, kw = jax.random.split(jax.random.PRNGKey(3))
+    a = jax.random.randint(ka, (m, k), -128, 127, jnp.int8)
+    w = jax.random.randint(kw, (k, n), -128, 127, jnp.int8)
+    interpret = _pallas_interpret()
+    out = []
+    for blocks in block_sets:
+        blocks = dict(blocks)
+        fn = jax.jit(functools.partial(
+            matmul_int8, interpret=interpret, **blocks))
+        t = time_fn(fn, a, w, warmup=warmup, reps=reps)
+        out.append(_entry("gemm_int8", dict(m=m, n=n, k=k, **blocks), t))
+    return out
+
+
+def measure_prefill_chunk(params, cfg, *, prompt=64, chunks=(16, 32, 64),
+                          batch=2, dtype=jnp.float32, warmup=1,
+                          reps=3) -> list[dict]:
+    """Time the engine's chunked prefill (``serve.step.make_prefill_step``)
+    across chunk buckets for one model config."""
+    from repro.models import transformer as tf
+    from repro.serve.step import make_prefill_step
+
+    max_len = 2 * prompt
+    prompts = jax.random.randint(jax.random.PRNGKey(4), (batch, prompt),
+                                 0, cfg.vocab)
+    out = []
+    for c in chunks:
+        step = jax.jit(make_prefill_step(cfg, chunk=c))
+
+        def run(params, prompts, c=c, step=step):
+            caches = tf.init_caches(cfg, batch, max_len, dtype)
+            tok, caches = step(params, prompts, caches)
+            return tok
+
+        t = time_fn(run, params, prompts, warmup=warmup, reps=reps)
+        out.append(_entry(
+            "prefill_chunk",
+            dict(tokens=prompt, chunk=c, batch=batch,
+                 cfg=config_hash(cfg)), t))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# generic single-point measurement (the tuner's confirm step)
+# ---------------------------------------------------------------------------
+
+
+def measure_point(kind: str, params: dict, *, model_params=None, cfg=None,
+                  warmup=2, reps=3) -> dict:
+    """Measure ONE (kind, params) point — how ``tune_runtime`` confirms
+    the cost model's predicted winners before deploying them."""
+    p = dict(params)
+    aux = {k: p.get(k) for k in DEFAULT_AUX}
+    if kind == "flash_prefill":
+        return measure_flash_prefill(
+            seqs=(p["seq"],), blocks=((p["block_q"], p["block_k"]),),
+            warmup=warmup, reps=reps, **aux)[0]
+    if kind == "decode":
+        return measure_decode(
+            buf=p["buf"], fills=(p["fill"],), block_ks=(p["block_k"],),
+            warmup=warmup, reps=reps, **aux)[0]
+    if kind == "paged_decode":
+        return measure_paged_decode(
+            max_len=p.get("max_len", 512), fills=(p["fill"],),
+            page_sizes=(p["page_size"],), warmup=warmup, reps=reps, **aux)[0]
+    if kind == "gemm_int8":
+        blocks = {k: p[k] for k in ("block_m", "block_n", "block_k")}
+        return measure_gemm(m=p["m"], n=p["n"], k=p["k"],
+                            block_sets=[blocks], warmup=warmup, reps=reps)[0]
+    if kind == "prefill_chunk":
+        if model_params is None or cfg is None:
+            raise ValueError("prefill_chunk needs model_params and cfg")
+        return measure_prefill_chunk(
+            model_params, cfg, prompt=p["tokens"], chunks=(p["chunk"],),
+            batch=p.get("batch", 2), warmup=warmup, reps=reps)[0]
+    raise ValueError(f"unknown measure kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# profile assembly
+# ---------------------------------------------------------------------------
+
+
+def collect_profile(entries, *, cfg=None, extra=None) -> dict:
+    """Wrap measured entries with the provenance the fit is keyed by."""
+    prof = {
+        "schema": PROFILE_SCHEMA,
+        "device": device_signature(),
+        "backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "jax_version": jax.__version__,
+        "entries": list(entries),
+    }
+    if cfg is not None:
+        prof["config_hash"] = config_hash(cfg)
+    if extra:
+        prof.update(extra)
+    return prof
+
+
+def save_profile(profile: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(profile, f, indent=1)
+
+
+def load_profile(path: str) -> dict:
+    with open(path) as f:
+        prof = json.load(f)
+    if prof.get("schema") != PROFILE_SCHEMA:
+        raise ValueError(f"stale profile schema {prof.get('schema')!r} "
+                         f"(current {PROFILE_SCHEMA}); re-measure")
+    return prof

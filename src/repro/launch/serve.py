@@ -28,8 +28,11 @@ from repro.serve.step import make_prefill_step, make_serve_step
 
 
 def _run_paged_engine(params, cfg, args):
+    from repro.models.layers import tuned
     from repro.serve.engine import ServingEngine, latency_stats
 
+    # explicit flag > tuning table (--autotune / --tuning-file) > default
+    page_size = args.page_size or int(tuned("serving").get("page_size", 16))
     max_len = args.prompt + args.new_tokens
     draft_params = draft_cfg = None
     if args.draft:
@@ -40,10 +43,10 @@ def _run_paged_engine(params, cfg, args):
         draft_params = tf.init(jax.random.PRNGKey(2), draft_cfg, jnp.float32)
     # with the prefix cache on, a zero-slack pool evicts every retired
     # prefix before its sharer arrives — double it so pages can linger
-    pages = -(-max_len // args.page_size) * args.batch
+    pages = -(-max_len // page_size) * args.batch
     engine_kw = dict(
         max_slots=args.batch, max_len=max_len,
-        page_size=args.page_size, kv_dtype=args.kv_dtype,
+        page_size=page_size, kv_dtype=args.kv_dtype,
         num_pages=2 * pages if args.prefix_cache else pages,
         prefill_chunk=max(16, args.prompt // 4),
         prefix_cache=args.prefix_cache,
@@ -118,7 +121,7 @@ def _run_paged_engine(params, cfg, args):
           f"ttft p50 {stats['ttft_p50_s']*1e3:.1f} ms, "
           f"p99 {stats['ttft_p99_s']*1e3:.1f} ms; "
           f"queue wait p99 {stats['queue_p99_s']*1e3:.1f} ms; "
-          f"pool {eng.num_pages} pages x {args.page_size} slots "
+          f"pool {eng.num_pages} pages x {eng.page_size} slots "
           f"({eng.kv_dtype}, {eng.pool_bytes/2**10:.0f} KiB)")
     es = eng.stats()
     print(f"  admitted {es['admitted']}, rejected {es['rejected']}; "
@@ -157,7 +160,18 @@ def main(argv=None):
     ap.add_argument("--engine", choices=["static", "paged"], default="static",
                     help="static: one fixed batch to completion; paged: "
                          "continuous batching over the paged KV cache")
-    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged-engine page size; default resolves through "
+                         "the tuning table (--autotune/--tuning-file), "
+                         "else 16")
+    ap.add_argument("--tuning-file", default=None,
+                    help="TuningTable JSON (core.autotune.tune_runtime) to "
+                         "load; with --autotune, where to save the search "
+                         "result")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the measured-cost knob search (tune_runtime) "
+                         "before serving and deploy the winning blocks/"
+                         "page size via set_tuning")
     ap.add_argument("--kv-dtype", choices=["f32", "bf16", "int8"],
                     default="f32",
                     help="paged-engine pool precision; int8 stores "
@@ -208,6 +222,24 @@ def main(argv=None):
     if cfg.is_enc_dec or cfg.frontend:
         raise SystemExit("use examples/serve_batched.py variants for "
                          "frontend/enc-dec archs")
+    if args.autotune:
+        from repro.core.autotune import tune_runtime
+        from repro.models.layers import set_tuning
+
+        kinds = ["flash_prefill", "decode", "gemm_int8"]
+        if args.engine == "paged":
+            kinds.append("paged_decode")
+        rep = tune_runtime(cfg=cfg, kinds=tuple(kinds),
+                           save_path=args.tuning_file, verbose=True)
+        set_tuning(rep.table)
+        if args.tuning_file:
+            print(f"autotune: saved tuning table to {args.tuning_file}")
+    elif args.tuning_file:
+        from repro.core.autotune import TuningTable
+        from repro.models.layers import set_tuning
+
+        set_tuning(TuningTable.load(args.tuning_file))
+        print(f"loaded tuning table {args.tuning_file}")
     if args.engine == "paged":
         params = tf.init(jax.random.PRNGKey(0), cfg, jnp.float32)
         _run_paged_engine(params, cfg, args)

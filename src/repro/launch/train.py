@@ -58,11 +58,33 @@ def main(argv=None):
     ap.add_argument("--fault-plan", default="",
                     help="injected faults, e.g. "
                          "'slowdown:step=6,stage=2,factor=3;kill:step=20'")
+    ap.add_argument("--tuning-file", default=None,
+                    help="TuningTable JSON to load before building the "
+                         "step (tuned flash/GEMM blocks); with --autotune, "
+                         "where to save the search result")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the measured-cost kernel knob search "
+                         "(core.autotune.tune_runtime) before training")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.scaled_down()
+
+    if args.autotune:
+        from repro.core.autotune import tune_runtime
+        from repro.models.layers import set_tuning
+
+        rep = tune_runtime(cfg=cfg,
+                           kinds=("flash_prefill", "decode", "gemm_int8"),
+                           save_path=args.tuning_file, verbose=True)
+        set_tuning(rep.table)
+    elif args.tuning_file:
+        from repro.core.autotune import TuningTable
+        from repro.models.layers import set_tuning
+
+        set_tuning(TuningTable.load(args.tuning_file))
+        print(f"loaded tuning table {args.tuning_file}")
 
     if args.supervise or args.fault_plan:
         from repro.ft.faults import FaultPlan

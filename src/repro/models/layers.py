@@ -98,6 +98,55 @@ def _pallas_gemm() -> bool:
 
 
 # ---------------------------------------------------------------------------
+# measured-cost tuning dispatch
+# ---------------------------------------------------------------------------
+
+# A ``core.autotune.TuningTable`` (``tune_runtime``'s output) consulted
+# by the hot-path dispatchers below and by ``serve.engine.ServingEngine``
+# for knobs the caller left unset: flash ``block_q``/``block_k``, decode
+# split-KV ``block_k``, GEMM block overrides, serving ``page_size`` /
+# ``prefill_chunk``.  Same contract as the impl dispatchers above:
+# seeded from $REPRO_TUNING (a table file path, loaded lazily and
+# ignored if its device signature doesn't match this process), and
+# switchable at runtime via ``set_tuning`` (re-jit applies it).
+# Explicit call-site arguments always win over the table.
+_TUNING = None
+_TUNING_LOADED = False
+
+
+def set_tuning(table) -> object:
+    """Install a ``TuningTable`` (or None to untune); returns the
+    previous table so callers can restore it."""
+    global _TUNING, _TUNING_LOADED
+    prev, _TUNING, _TUNING_LOADED = _TUNING, table, True
+    return prev
+
+
+def tuning_table():
+    """The active ``TuningTable`` (None = defaults).  First call loads
+    $REPRO_TUNING if set; a table measured on a different
+    backend/device/impl signature is ignored."""
+    global _TUNING, _TUNING_LOADED
+    if not _TUNING_LOADED:
+        _TUNING_LOADED = True
+        path = os.environ.get("REPRO_TUNING")
+        if path:
+            from repro.core.autotune import TuningTable
+            from repro.core.measure import device_signature
+
+            table = TuningTable.load(path)
+            if table.device in ("any", device_signature()):
+                _TUNING = table
+    return _TUNING
+
+
+def tuned(kind: str) -> dict:
+    """Tuned knobs for one cost kind ({} when untuned)."""
+    t = tuning_table()
+    return t.get(kind) if t is not None else {}
+
+
+# ---------------------------------------------------------------------------
 # initializers
 # ---------------------------------------------------------------------------
 
@@ -142,8 +191,10 @@ def quant_dense_apply(p, x, act: str | None = None):
     if _pallas_gemm():
         from repro.kernels.ops import dense_int8
 
+        blocks = {k: int(v) for k, v in tuned("gemm_int8").items()
+                  if k in ("block_m", "block_n", "block_k")}
         y = dense_int8(qx, p["qw"], scale, bias=bias, act=act,
-                       interpret=_pallas_interpret())
+                       interpret=_pallas_interpret(), **blocks)
     else:
         acc = jnp.dot(qx.astype(jnp.int32), p["qw"].astype(jnp.int32))
         y = acc.astype(jnp.float32) * scale[None, :]
@@ -279,6 +330,8 @@ def flash_attend(
     q_chunk: int = 1024,
     kv_chunk: int = 1024,
     kv_len=None,
+    block_q: int | None = None,
+    block_k: int | None = None,
 ):
     """Tiled online-softmax attention — never materializes (S, T) logits.
 
@@ -291,20 +344,30 @@ def flash_attend(
     q: (B,S,H,D); k/v: (B,T,Hkv,Dv); GQA grouping handled internally.
     ``q_offset``: absolute position of query 0 (decode/prefill resume).
     ``kv_len``: dynamic count of valid kv positions (padded caches).
+    ``block_q``/``block_k`` override the tile sizes on BOTH impls
+    (Pallas grid blocks / reference chunk sizes); left None they resolve
+    through the tuning table (``set_tuning``), else the legacy defaults
+    (Pallas ``min(chunk, 128)``, reference ``q_chunk``/``kv_chunk``).
     """
+    if block_q is None or block_k is None:
+        t = tuned("flash_prefill")
+        block_q = block_q if block_q is not None else t.get("block_q")
+        block_k = block_k if block_k is not None else t.get("block_k")
     if _pallas_attention():
         from repro.kernels.flash_attention import flash_attention
 
         return flash_attention(
             q, k, v, q_offset=q_offset, window=window,
             bidirectional=bidirectional, scale=scale, kv_len=kv_len,
-            block_q=min(q_chunk, 128), block_k=min(kv_chunk, 128),
+            block_q=int(block_q) if block_q else min(q_chunk, 128),
+            block_k=int(block_k) if block_k else min(kv_chunk, 128),
             interpret=_pallas_interpret(),
         )
     return flash_attend_ref(
         q, k, v, q_offset=q_offset, window=window,
-        bidirectional=bidirectional, scale=scale, q_chunk=q_chunk,
-        kv_chunk=kv_chunk, kv_len=kv_len,
+        bidirectional=bidirectional, scale=scale,
+        q_chunk=int(block_q) if block_q else q_chunk,
+        kv_chunk=int(block_k) if block_k else kv_chunk, kv_len=kv_len,
     )
 
 
@@ -419,19 +482,27 @@ def softmax_attend(q, k, v, mask=None, *, scale: float | None = None):
 
 
 def decode_attend(q, k, v, *, kv_len, window: int = 0,
-                  scale: float | None = None):
+                  scale: float | None = None,
+                  block_k: int | None = None):
     """Single-token decode attention over a padded KV cache.
 
     q: (B,1,H,D); k/v: (B,T,Hkv,D[v]) with the new token's K/V already
     written, so the query's absolute position is ``kv_len - 1`` (traced).
     Dispatcher twin of ``flash_attend``: the Pallas split-KV kernel costs
     O(kv_len) per step; the jnp fallback masks the full O(T) buffer.
+    ``block_k`` sets the kernel's split-KV partition size (None resolves
+    through the tuning table, else the kernel default; the jnp fallback
+    has no partitioning so the knob is a no-op there).
     """
+    if block_k is None:
+        block_k = tuned("decode").get("block_k")
     if _pallas_attention():
-        from repro.kernels.decode_attention import decode_attention
+        from repro.kernels.decode_attention import (
+            DEFAULT_BLOCK_K, decode_attention)
 
         return decode_attention(
             q, k, v, kv_len=kv_len, window=window, scale=scale,
+            block_k=int(block_k) if block_k else DEFAULT_BLOCK_K,
             interpret=_pallas_interpret(),
         )
     # q_pos = kv_len - 1, so "<= q_pos" doubles as the kv_len clamp

@@ -227,8 +227,9 @@ class ServingEngine:
     """
 
     def __init__(self, params, cfg, *, max_slots: int = 4,
-                 max_len: int = 512, page_size: int = 16,
-                 num_pages: int | None = None, prefill_chunk: int = 64,
+                 max_len: int = 512, page_size: int | None = None,
+                 num_pages: int | None = None,
+                 prefill_chunk: int | None = None,
                  dtype=jnp.float32, eos_id: int | None = None,
                  kv_dtype: str | None = None,
                  pool_bytes: int | None = None,
@@ -243,6 +244,16 @@ class ServingEngine:
                 f"ServingEngine: {cfg.name} ({cfg.family}) has recurrent/"
                 "enc-dec caches — use the static loop")
         from repro.models import transformer as tf
+        from repro.models.layers import tuned
+
+        # knobs the caller left unset resolve through the tuning table
+        # (core.autotune.tune_runtime -> set_tuning / $REPRO_TUNING),
+        # falling back to the legacy defaults
+        serving_knobs = tuned("serving")
+        if page_size is None:
+            page_size = int(serving_knobs.get("page_size", 16))
+        if prefill_chunk is None:
+            prefill_chunk = int(serving_knobs.get("prefill_chunk", 64))
 
         self.params, self.cfg = params, cfg
         self.max_slots, self.max_len = max_slots, max_len

@@ -1,0 +1,358 @@
+"""Measured-cost autotuning: TuningTable persistence, RuntimeCostModel
+monotonicity, knob threading, tuned-vs-default serving parity, and
+choose_pattern agreement with measurement."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import measure
+from repro.core.autotune import (
+    TUNING_VERSION,
+    TuningTable,
+    choose_pattern,
+    tune_runtime,
+)
+from repro.core.cost_model import (
+    RuntimeCostModel,
+    flash_tile_work,
+    runtime_features,
+)
+from repro.models import layers, transformer as tf
+from repro.serve.engine import ServingEngine
+from repro.serve.step import generate
+
+
+@pytest.fixture(autouse=True)
+def _untuned():
+    """Every test starts and ends with no tuning table installed."""
+    prev = layers.set_tuning(None)
+    yield
+    layers.set_tuning(prev)
+
+
+# ---------------------------------------------------------------------------
+# TuningTable persistence
+# ---------------------------------------------------------------------------
+
+
+def test_tuning_table_roundtrip(tmp_path):
+    t = TuningTable(device="cpu/test/attn=jnp,gemm=jnp")
+    t.put("flash_prefill", block_q=256, block_k=128)
+    t.put("serving", page_size=32)
+    t.put("serving", prefill_chunk=16)  # merges, doesn't replace
+    t.meta["config_hash"] = "abc123"
+    path = tmp_path / "table.json"
+    t.save(str(path))
+    back = TuningTable.load(str(path))
+    assert back.device == t.device
+    assert back.get("flash_prefill") == {"block_q": 256, "block_k": 128}
+    assert back.get("serving") == {"page_size": 32, "prefill_chunk": 16}
+    assert back.get("missing_kind") == {}
+    assert back.meta["config_hash"] == "abc123"
+
+
+def test_tuning_table_stale_version_rejected(tmp_path):
+    path = tmp_path / "stale.json"
+    path.write_text(json.dumps({"version": TUNING_VERSION + 1,
+                                "entries": {"serving": {"page_size": 8}}}))
+    with pytest.raises(ValueError, match="stale tuning table"):
+        TuningTable.load(str(path))
+    # missing version is stale too, not a KeyError
+    path.write_text(json.dumps({"entries": {}}))
+    with pytest.raises(ValueError, match="stale tuning table"):
+        TuningTable.load(str(path))
+
+
+def test_env_tuning_hook(tmp_path, monkeypatch):
+    """$REPRO_TUNING lazy-loads a matching table; a foreign device
+    signature is ignored."""
+    t = TuningTable(device=measure.device_signature())
+    t.put("serving", page_size=8)
+    path = tmp_path / "env_table.json"
+    t.save(str(path))
+    monkeypatch.setenv("REPRO_TUNING", str(path))
+    monkeypatch.setattr(layers, "_TUNING", None)
+    monkeypatch.setattr(layers, "_TUNING_LOADED", False)
+    assert layers.tuned("serving") == {"page_size": 8}
+
+    foreign = TuningTable(device="tpu/v9/attn=pallas,gemm=pallas")
+    foreign.put("serving", page_size=4)
+    foreign.save(str(path))
+    monkeypatch.setattr(layers, "_TUNING", None)
+    monkeypatch.setattr(layers, "_TUNING_LOADED", False)
+    assert layers.tuned("serving") == {}
+
+
+# ---------------------------------------------------------------------------
+# RuntimeCostModel
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_entries():
+    """Synthetic profile with known positive-linear structure."""
+    entries = []
+    for seq in (128, 256, 512):
+        for bq in (64, 128, 256):
+            p = dict(seq=seq, block_q=bq, block_k=bq, batch=1, heads=4,
+                     head_dim=64)
+            f = runtime_features("flash_prefill", p)
+            entries.append({"kind": "flash_prefill", "params": p,
+                            "t_s": 1e-9 * f[0] + 2e-5 * f[1] + 1e-4})
+    for fill in (64, 256, 1024):
+        for bk in (128, 512):
+            p = dict(buf=1024, fill=fill, block_k=bk, batch=2, heads=4,
+                     head_dim=64)
+            f = runtime_features("decode", p)
+            entries.append({"kind": "decode", "params": p,
+                            "t_s": 2e-9 * f[0] + 1e-5 * f[1] + 5e-5})
+    for fill in (32, 128, 512):
+        for pg in (8, 16, 32):
+            p = dict(fill=fill, page_size=pg, max_len=512, batch=2,
+                     heads=4, head_dim=64)
+            f = runtime_features("paged_decode", p)
+            entries.append({"kind": "paged_decode", "params": p,
+                            "t_s": 1e-9 * f[0] + 3e-5 * f[1] + 1e-4})
+    return entries
+
+
+def test_cost_model_fit_and_roundtrip():
+    entries = _synthetic_entries()
+    m = RuntimeCostModel.fit(entries, device="synthetic")
+    assert m.mape(entries) < 0.05  # exact linear structure must fit tight
+    back = RuntimeCostModel.from_json(m.to_json())
+    for e in entries[:5]:
+        assert back.predict(e["kind"], **e["params"]) == pytest.approx(
+            m.predict(e["kind"], **e["params"]))
+    with pytest.raises(ValueError, match="stale RuntimeCostModel"):
+        RuntimeCostModel.from_json({"schema": -1})
+
+
+def test_cost_model_monotonic():
+    """More tokens / pages / fill is never predicted cheaper — the
+    nonnegative-weight-over-monotone-features guarantee."""
+    m = RuntimeCostModel.fit(_synthetic_entries(), device="synthetic")
+    aux = dict(batch=1, heads=4, head_dim=64)
+    seqs = [64, 128, 256, 512, 1024, 2048]
+    pred = [m.predict("flash_prefill", seq=s, block_q=128, block_k=128,
+                      **aux) for s in seqs]
+    assert all(a <= b + 1e-12 for a, b in zip(pred, pred[1:]))
+    fills = [16, 64, 256, 512, 1024]
+    pred = [m.predict("decode", buf=1024, fill=f, block_k=256, **aux)
+            for f in fills]
+    assert all(a <= b + 1e-12 for a, b in zip(pred, pred[1:]))
+    pred = [m.predict("paged_decode", fill=f, page_size=16, max_len=1024,
+                      **aux) for f in fills]
+    assert all(a <= b + 1e-12 for a, b in zip(pred, pred[1:]))
+
+
+def test_flash_tile_work_matches_kernel_oracle():
+    from repro.kernels.flash_attention import flash_tile_counts
+
+    for s, t, bq, bk in ((256, 256, 64, 64), (256, 256, 128, 64),
+                         (512, 512, 128, 128), (100, 200, 64, 32)):
+        assert flash_tile_work(s, t, block_q=bq, block_k=bk) == \
+            flash_tile_counts(s, t, block_q=bq, block_k=bk)
+
+
+def test_cost_model_ingests_bench_rows():
+    m = RuntimeCostModel(device="x")
+    n = m.ingest_bench([{"name": "serving_paged", "us_per_call": 2072.7,
+                         "derived": "tok_s=482"},
+                        {"name": "no_time", "us_per_call": None}])
+    assert n == 1
+    assert m.predict("bench", name="serving_paged") == pytest.approx(
+        2072.7e-6)
+
+
+# ---------------------------------------------------------------------------
+# knob threading through the dispatchers
+# ---------------------------------------------------------------------------
+
+
+def test_flash_block_override_matches_default():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (1, 128, 4, 32), jnp.float32)
+    k = jax.random.normal(k2, (1, 128, 2, 32), jnp.float32)
+    v = jax.random.normal(k3, (1, 128, 2, 32), jnp.float32)
+    for impl in ("jnp", "pallas"):
+        prev = layers.set_attention_impl(impl)
+        try:
+            base = layers.flash_attend(q, k, v)
+            tuned = layers.flash_attend(q, k, v, block_q=32, block_k=64)
+        finally:
+            layers.set_attention_impl(prev)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(tuned),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_decode_block_override_matches_default():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(k1, (2, 1, 4, 32), jnp.float32)
+    k = jax.random.normal(k2, (2, 256, 2, 32), jnp.float32)
+    v = jax.random.normal(k3, (2, 256, 2, 32), jnp.float32)
+    prev = layers.set_attention_impl("pallas")
+    try:
+        base = layers.decode_attend(q, k, v, kv_len=jnp.int32(200))
+        tuned = layers.decode_attend(q, k, v, kv_len=jnp.int32(200),
+                                     block_k=64)
+    finally:
+        layers.set_attention_impl(prev)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(tuned),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_tuned_flash_blocks_reach_kernel():
+    """A tuning-table entry changes the executed grid the same way an
+    explicit block override does."""
+    from repro.kernels.flash_attention import flash_attention
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(k1, (1, 256, 4, 32), jnp.float32)
+    k = jax.random.normal(k2, (1, 256, 2, 32), jnp.float32)
+    v = jax.random.normal(k3, (1, 256, 2, 32), jnp.float32)
+    want = flash_attention(q, k, v, block_q=256, block_k=256,
+                           interpret=True)
+    t = TuningTable()
+    t.put("flash_prefill", block_q=256, block_k=256)
+    prev_impl = layers.set_attention_impl("pallas")
+    layers.set_tuning(t)
+    try:
+        got = layers.flash_attend(q, k, v)
+    finally:
+        layers.set_tuning(None)
+        layers.set_attention_impl(prev_impl)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# engine knob resolution + tuned-vs-default parity
+# ---------------------------------------------------------------------------
+
+
+def _small_model():
+    cfg = get_config("qwen3_0p6b").scaled_down(num_layers=2, d_model=64,
+                                               vocab=256)
+    params = tf.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    return cfg, params
+
+
+def test_engine_resolves_serving_knobs_from_table():
+    cfg, params = _small_model()
+    t = TuningTable()
+    t.put("serving", page_size=8, prefill_chunk=16)
+    layers.set_tuning(t)
+    eng = ServingEngine(params, cfg, max_slots=2, max_len=64)
+    assert eng.page_size == 8
+    assert eng._prefill_chunk == 16
+    # explicit arguments beat the table
+    eng = ServingEngine(params, cfg, max_slots=2, max_len=64, page_size=16,
+                        prefill_chunk=32)
+    assert eng.page_size == 16
+    assert eng._prefill_chunk == 32
+    layers.set_tuning(None)
+    eng = ServingEngine(params, cfg, max_slots=2, max_len=64)
+    assert eng.page_size == 16       # legacy defaults when untuned
+    assert eng._prefill_chunk == 64
+
+
+def test_tuned_vs_default_token_parity():
+    """Pinned trace: greedy tokens under a tuned table (different page
+    size, prefill chunk, flash blocks) must equal the untuned engine's
+    AND the dense ``generate`` reference, bitwise."""
+    cfg, params = _small_model()
+    reqs = [(np.array([5, 7, 11, 13, 17], np.int32), 4),
+            (np.array([1, 2, 3, 4, 5, 6, 7, 8], np.int32), 6),
+            (np.array([9] * 13, np.int32), 3)]
+
+    def run():
+        eng = ServingEngine(params, cfg, max_slots=2, max_len=64)
+        for p, n in reqs:
+            eng.submit(jnp.asarray(p), n)
+        return {r.rid: np.array(r.tokens) for r in eng.run()}
+
+    base = run()
+    t = TuningTable()
+    t.put("serving", page_size=8, prefill_chunk=16)
+    t.put("flash_prefill", block_q=64, block_k=64)
+    t.put("decode", block_k=256)
+    layers.set_tuning(t)
+    try:
+        tuned = run()
+    finally:
+        layers.set_tuning(None)
+    assert set(base) == set(tuned)
+    for rid in base:
+        np.testing.assert_array_equal(base[rid], tuned[rid])
+    for rid, (p, n) in enumerate(reqs):
+        want = np.asarray(generate(params, cfg, jnp.asarray(p)[None],
+                                   max_new=n, max_len=64,
+                                   dtype=jnp.float32))[0]
+        np.testing.assert_array_equal(base[rid], want)
+
+
+# ---------------------------------------------------------------------------
+# tune_runtime + choose_pattern against real measurements
+# ---------------------------------------------------------------------------
+
+
+def test_tune_runtime_search(tmp_path):
+    grids = {"flash_prefill": (dict(seq=128),
+                               dict(block_q=128, block_k=128),
+                               [dict(block_q=b, block_k=b)
+                                for b in (32, 64, 128)])}
+    path = tmp_path / "t.json"
+    rep = tune_runtime(kinds=("flash_prefill",), grids=grids, reps=2,
+                       save_path=str(path))
+    r = rep.result("flash_prefill")
+    assert r.best_s <= r.default_s * 1.05  # best-of includes the default
+    assert rep.table.get("flash_prefill")  # knobs deployed
+    back = TuningTable.load(str(path))
+    assert back.get("flash_prefill") == rep.table.get("flash_prefill")
+    assert "flash_prefill" in rep.model.coef
+
+
+def test_choose_pattern_agrees_with_measured_winner():
+    """Fit on real (interpret-kernel) measurements of a decisive case:
+    one-partition dense decode vs many-page paged decode."""
+    prev = layers.set_attention_impl("pallas")
+    try:
+        entries = measure.measure_decode(
+            buf=256, fills=(64, 256), block_ks=(128, 256), reps=2)
+        entries += measure.measure_paged_decode(
+            max_len=256, fills=(64, 256), page_sizes=(8, 16), reps=2)
+    finally:
+        layers.set_attention_impl(prev)
+    m = RuntimeCostModel.fit(entries, device="test")
+    dense = next(e["t_s"] for e in entries if e["kind"] == "decode"
+                 and e["params"]["fill"] == 256
+                 and e["params"]["block_k"] == 256)
+    paged = next(e["t_s"] for e in entries if e["kind"] == "paged_decode"
+                 and e["params"]["fill"] == 256
+                 and e["params"]["page_size"] == 8)
+    measured = "dense" if dense < paged else "paged"
+    margin = max(dense, paged) / min(dense, paged)
+    choice = choose_pattern(m, batch=1, max_len=256, fill=256, page_size=8,
+                            block_k=256)
+    if margin >= 1.5:  # decisive measurement -> the model must agree
+        assert choice.cache_layout == measured
+    assert choice.execution == "sequential"
+    assert choice.predicted["dense_step_s"] > 0
+    # byte-budget override: dense residency over budget forces paged
+    forced = choose_pattern(m, batch=1, max_len=256, fill=256, page_size=8,
+                            block_k=256, kv_bytes_budget=1.0)
+    assert forced.cache_layout == "paged"
+    assert forced.reasons[0].startswith("dense KV residency")
+
+
+def test_choose_pattern_pipeline_decision():
+    m = RuntimeCostModel.fit(_synthetic_entries(), device="synthetic")
+    seq = choose_pattern(m, batch=1, max_len=512, stages=4, microbatches=1)
+    assert seq.execution == "sequential"  # 1 microbatch: pipe never fills
+    pipe = choose_pattern(m, batch=1, max_len=512, stages=4, microbatches=8)
+    assert pipe.execution == "pipelined"
+    assert pipe.predicted["pipeline_rounds"] < 4 * 8
